@@ -1,0 +1,243 @@
+"""Shared benchmark utilities: timing, CSV emit, training drivers for the
+paper's MLP / LSTM models under the three dropout modes."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampler import PatternSchedule, build_schedule
+from repro.models import paper as PM
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall-time (s) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows: list[dict], path: str | None = None):
+    if not rows:
+        return
+    cols = list(rows[0])
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r.get(c, "")) for c in cols))
+    text = "\n".join(lines)
+    print(text, flush=True)
+    if path:
+        from pathlib import Path
+        Path(path).parent.mkdir(parents=True, exist_ok=True)
+        Path(path).write_text(text + "\n")
+
+
+# --------------------------------------------------------------------------
+# MLP training (paper §IV-A/B) under each dropout mode
+# --------------------------------------------------------------------------
+
+def train_mlp(mode: str, rates: tuple[float, float], sizes, data,
+              *, steps: int = 300, batch: int = 128, lr: float = 0.01,
+              momentum: float = 0.9, seed: int = 0, dp_max: int = 8,
+              time_steps: int = 20):
+    """Train the paper's MLP; returns (test_acc, median_step_time_s).
+
+    mode: 'none' | 'bernoulli' | 'rdp' | 'tdp'.  rates apply to the two
+    hidden layers.  Matches the paper's hyperparameters (§IV-A): batch 128,
+    lr 0.01, momentum 0.9.
+
+    Input features are zero-padded to a multiple of 256 (784 → 1024) so the
+    TDP tile grid divides evenly (the paper's GPU kernels handle the ragged
+    784-edge tile; the TPU diagonal-TDP scheme requires dp | K/tile —
+    padding is applied to every mode equally, so comparisons are fair).
+    """
+    (xtr, ytr), (xte, yte) = data
+    d_in = ((sizes[0] + 255) // 256) * 256
+    if d_in != sizes[0]:
+        pad = ((0, 0), (0, d_in - sizes[0]))
+        xtr, xte = np.pad(xtr, pad), np.pad(xte, pad)
+        sizes = (d_in,) + tuple(sizes[1:])
+    key = jax.random.PRNGKey(seed)
+    params = PM.init_mlp(key, sizes)
+    vel = jax.tree.map(jnp.zeros_like, params)
+
+    scheds = None
+    if mode in ("rdp", "tdp"):
+        # N (=dp_max) is a free input of Alg. 1: cap it so the sparsest
+        # pattern's rate (N-1)/N stays within ~0.15 of the target — very
+        # sparse patterns (dp=8 at p=0.5) destabilize SGD+momentum without
+        # helping the expected rate.
+        def n_for(r):
+            n = 2
+            while (n - 1) / n < min(r + 0.15, 0.93) and n < dp_max:
+                n *= 2
+            return n
+        scheds = [build_schedule(mode, r, n_units_blocks=min(s, 32),
+                                 dp_max=n_for(r), block=1, seed=seed + i)
+                  for i, (r, s) in enumerate(zip(rates, sizes[1:-1]))]
+
+    def loss_bernoulli(p, x, y, rng):
+        logits = PM.mlp_apply_bernoulli(p, x, rng, rates)
+        return PM.xent(logits, y)
+
+    def loss_none(p, x, y):
+        logits = PM.mlp_apply_eval(p, x)
+        return PM.xent(logits, y)
+
+    @jax.jit
+    def sgd(p, v, g):
+        # global-norm clip (benign, applied to EVERY mode identically)
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(t))
+                          for t in jax.tree.leaves(g)))
+        g = jax.tree.map(lambda t: t * jnp.minimum(1.0, 5.0 / (gn + 1e-9)),
+                         g)
+        v = jax.tree.map(lambda vv, gg: momentum * vv + gg, v, g)
+        p = jax.tree.map(lambda pp, vv: pp - lr * vv, p, v)
+        return p, v
+
+    grad_bern = jax.jit(jax.grad(loss_bernoulli))
+    grad_none = jax.jit(jax.grad(loss_none))
+
+    # paper: 32x32 tiles (GPU shared-memory banks); requires dp | (dim/tile)
+    # for every weight matrix under dropout
+    tdp_tile = 32
+
+    # fully-jitted pattern grads, one executable per dps bucket (the
+    # bias vector is traced — no recompile across biases)
+    import functools as _ft
+
+    @_ft.partial(jax.jit, static_argnames=("dps",))
+    def grad_rdp(p, x, y, dps, biases):
+        def loss(p):
+            return PM.xent(PM.mlp_apply_rdp(p, x, dps, biases), y)
+        return jax.grad(loss)(p)
+
+    @_ft.partial(jax.jit, static_argnames=("dps",))
+    def grad_tdp(p, x, y, dps, biases):
+        def loss(p):
+            return PM.xent(PM.mlp_apply_tdp(p, x, dps, biases,
+                                            tile=tdp_tile), y)
+        return jax.grad(loss)(p)
+
+    def grad_pattern(p, x, y, dps, biases):
+        fn = grad_rdp if mode == "rdp" else grad_tdp
+        return fn(p, x, y, dps, jnp.asarray(biases, jnp.int32))
+
+    rng = np.random.default_rng(seed)
+    n = len(xtr)
+    times = []
+    for step in range(steps):
+        idx = rng.integers(0, n, batch)
+        x, y = jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx])
+        t0 = time.perf_counter()
+        if mode == "bernoulli":
+            g = grad_bern(params, x, y, jax.random.PRNGKey(step))
+        elif mode == "none":
+            g = grad_none(params, x, y)
+        else:
+            pats = [s.sample(step) for s in scheds]
+            dps = tuple(pat.dp for pat, _ in pats)
+            biases = tuple(b for _, b in pats)
+            g = grad_pattern(params, x, y, dps, biases)
+        params, vel = sgd(params, vel, g)
+        jax.block_until_ready(jax.tree.leaves(params)[0])
+        times.append(time.perf_counter() - t0)
+
+    logits = PM.mlp_apply_eval(params, jnp.asarray(xte))
+    acc = float((jnp.argmax(logits, -1) == jnp.asarray(yte)).mean())
+    # steady-state step time: median of the last `time_steps`
+    t = float(np.median(times[-time_steps:]))
+    return acc, t
+
+
+# --------------------------------------------------------------------------
+# LSTM LM training (paper §IV-C)
+# --------------------------------------------------------------------------
+
+def train_lstm(mode: str, rates: tuple[float, float], tokens,
+               *, vocab: int = 8800, steps: int = 60, batch: int = 20,
+               seq: int = 35, lr: float = 1.0, seed: int = 0,
+               d_hid: int = 1500, time_steps: int = 15):
+    """Train the paper's 2×1500 LSTM LM; returns (test_ppl, step_time_s)."""
+    from repro.data.pipeline import lm_batches
+    key = jax.random.PRNGKey(seed)
+    params = PM.init_lstm_lm(key, vocab=vocab, d_hid=d_hid)
+
+    scheds = None
+    if mode in ("rdp", "tdp"):
+        def n_for(r):
+            n = 2
+            while (n - 1) / n < min(r + 0.15, 0.93) and n < 8:
+                n *= 2
+            return n
+        scheds = [build_schedule("rdp", r, n_units_blocks=30,
+                                 dp_max=min(n_for(r), 6),
+                                 block=d_hid // 30, seed=seed + i)
+                  for i, r in enumerate(rates)]
+
+    def loss_bern(p, x, y, rng):
+        return PM.xent(PM.lstm_lm_apply_bernoulli(p, x, rng, rates), y)
+
+    def loss_none(p, x, y):
+        return PM.xent(PM.lstm_lm_apply_eval(p, x), y)
+
+    grad_bern = jax.jit(jax.value_and_grad(loss_bern))
+    grad_none = jax.jit(jax.value_and_grad(loss_none))
+
+    import functools as _ft
+
+    @_ft.partial(jax.jit, static_argnames=("dps",))
+    def grad_pattern_jit(p, x, y, dps, biases):
+        def loss(p):
+            logits = PM.lstm_lm_apply_rdp(p, x, dps, biases,
+                                          block=d_hid // 30)
+            return PM.xent(logits, y)
+        return jax.value_and_grad(loss)(p)
+
+    def grad_pattern(p, x, y, dps, biases):
+        return grad_pattern_jit(p, x, y, dps,
+                                jnp.asarray(biases, jnp.int32))
+
+    @jax.jit
+    def sgd_clip(p, g, lr_now):
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                          for x in jax.tree.leaves(g)))
+        scale = jnp.minimum(1.0, 5.0 / jnp.maximum(gn, 1e-9)) * lr_now
+        return jax.tree.map(lambda pp, gg: pp - scale * gg, p, g)
+
+    batches = list(lm_batches(tokens, batch, seq, seed=seed))
+    times, losses = [], []
+    for step in range(steps):
+        b = batches[step % len(batches)]
+        x, y = jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])
+        lr_now = jnp.float32(lr * (0.9 ** (step // 20)))
+        t0 = time.perf_counter()
+        if mode == "bernoulli":
+            l, g = grad_bern(params, x, y, jax.random.PRNGKey(step))
+        elif mode == "none":
+            l, g = grad_none(params, x, y)
+        else:
+            pats = [s.sample(step) for s in scheds]
+            dps = tuple(pat.dp for pat, _ in pats)
+            biases = tuple(bb for _, bb in pats)
+            l, g = grad_pattern(params, x, y, dps, biases)
+        params = sgd_clip(params, g, lr_now)
+        jax.block_until_ready(jax.tree.leaves(params)[0])
+        times.append(time.perf_counter() - t0)
+        losses.append(float(l))
+
+    # held-out perplexity on the next unseen batches
+    ppl_losses = []
+    for b in batches[steps % len(batches):][:5]:
+        x, y = jnp.asarray(b["tokens"]), jnp.asarray(b["labels"])
+        ppl_losses.append(float(loss_none(params, x, y)))
+    ppl = float(np.exp(np.mean(ppl_losses)))
+    return ppl, float(np.median(times[-time_steps:]))

@@ -1,0 +1,67 @@
+"""Kernel micro-bench: FLOP fraction + wall time of compact vs dense matmul.
+
+The TPU win is structural (1/dp of the FLOPs and weight DMA); on CPU we
+report measured wall-time of the XLA compact path vs the dense+mask path,
+plus the exact FLOP fractions the dry-run confirms.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dropout import (rdp_ffn_apply, rdp_ffn_oracle,
+                                tdp_matmul_apply, tdp_matmul_oracle)
+
+from .common import emit, time_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--m", type=int, default=512)
+    ap.add_argument("--d", type=int, default=1024)
+    ap.add_argument("--ff", type=int, default=4096)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    m, d, ff = (128, 256, 1024) if args.quick else (args.m, args.d, args.ff)
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (m, d), jnp.float32)
+    w_up = jax.random.normal(ks[1], (d, ff), jnp.float32) * 0.02
+    w_dn = jax.random.normal(ks[2], (ff, d), jnp.float32) * 0.02
+
+    ffn_mask = jax.jit(lambda x: rdp_ffn_oracle(x, w_up, w_dn, 2, 0))
+    rows = []
+    for dp in (1, 2, 4, 8):
+        compact = jax.jit(lambda x, dp=dp: rdp_ffn_apply(
+            x, w_up, w_dn, dp, 0, block=128))
+        masked = jax.jit(lambda x, dp=dp: rdp_ffn_oracle(
+            x, w_up, w_dn, dp, 0, block=128))
+        t_c = time_fn(compact, x)
+        t_m = time_fn(masked, x)
+        rows.append({"op": "rdp_ffn", "dp": dp,
+                     "flop_fraction": round(1.0 / dp, 4),
+                     "t_compact_us": round(t_c * 1e6, 1),
+                     "t_masked_us": round(t_m * 1e6, 1),
+                     "speedup": round(t_m / t_c, 3)})
+    for dp in (1, 2, 4):
+        tile = min(128, d // 8)      # keep dp | (d/tile) for all dp swept
+        compact = jax.jit(lambda x, dp=dp: tdp_matmul_apply(
+            x, w_up, dp, 0, tile=tile))
+        masked = jax.jit(lambda x, dp=dp: tdp_matmul_oracle(
+            x, w_up, dp, 0, tile=tile))
+        t_c = time_fn(compact, x)
+        t_m = time_fn(masked, x)
+        rows.append({"op": "tdp_matmul", "dp": dp,
+                     "flop_fraction": round(1.0 / dp, 4),
+                     "t_compact_us": round(t_c * 1e6, 1),
+                     "t_masked_us": round(t_m * 1e6, 1),
+                     "speedup": round(t_m / t_c, 3)})
+    emit(rows, args.out)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

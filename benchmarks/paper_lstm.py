@@ -1,0 +1,69 @@
+"""Paper Table II / Fig. 6: LSTM LM dropout sweep + batch-size scaling.
+
+  python -m benchmarks.paper_lstm                 # Table II
+  python -m benchmarks.paper_lstm --batch-sweep   # Fig. 6(b)
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.data.pipeline import synthetic_ptb
+
+from .common import emit, train_lstm
+
+
+def table2(steps: int, d_hid: int, out: str | None):
+    toks = synthetic_ptb(n_tokens=120_000)
+    rows = []
+    for p in (0.3, 0.5, 0.7):
+        ppl_b, t_b = train_lstm("bernoulli", (p, p), toks, steps=steps,
+                                d_hid=d_hid)
+        for mode in ("rdp",):
+            ppl, t = train_lstm(mode, (p, p), toks, steps=steps, d_hid=d_hid)
+            rows.append({
+                "rate": p, "mode": mode,
+                "ppl": round(ppl, 2), "ppl_bernoulli": round(ppl_b, 2),
+                "t_step_ms": round(t * 1e3, 1),
+                "t_bernoulli_ms": round(t_b * 1e3, 1),
+                "speedup": round(t_b / t, 3),
+            })
+    emit(rows, out)
+    return rows
+
+
+def batch_sweep(steps: int, d_hid: int, out: str | None):
+    toks = synthetic_ptb(n_tokens=120_000)
+    p = 0.5
+    rows = []
+    for batch in (20, 30, 40):
+        ppl_b, t_b = train_lstm("bernoulli", (p, p), toks, steps=steps,
+                                batch=batch, d_hid=d_hid)
+        ppl, t = train_lstm("rdp", (p, p), toks, steps=steps, batch=batch,
+                            d_hid=d_hid)
+        rows.append({
+            "batch": batch, "ppl_rdp": round(ppl, 2),
+            "ppl_bernoulli": round(ppl_b, 2),
+            "speedup": round(t_b / t, 3),
+        })
+    emit(rows, out)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch-sweep", action="store_true")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--d-hid", type=int, default=1500)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    steps, d_hid = (args.steps, args.d_hid)
+    if args.quick:
+        steps, d_hid = 25, 600
+    if args.batch_sweep:
+        return batch_sweep(steps, d_hid, args.out)
+    return table2(steps, d_hid, args.out)
+
+
+if __name__ == "__main__":
+    main()

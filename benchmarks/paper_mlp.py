@@ -1,0 +1,76 @@
+"""Paper Fig. 4 + Table I: MLP dropout-rate sweep and width sweep.
+
+  python -m benchmarks.paper_mlp             # Fig. 4 (rate sweep)
+  python -m benchmarks.paper_mlp --table1    # Table I (width sweep, p=0.7)
+  ... --quick  (fewer steps — CI smoke)
+
+Reports per (rate|width, mode): test accuracy, steady-state step time, and
+speedup vs conventional Bernoulli dropout.  On this CPU container the
+wall-time speedup is indicative (XLA CPU also skips the dropped FLOPs);
+the TPU-projected speedup is the measured FLOP fraction (reported too).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.data.pipeline import synthetic_mnist
+
+from .common import emit, train_mlp
+
+
+def fig4(steps: int, out: str | None):
+    data = synthetic_mnist()
+    sizes = (784, 2048, 2048, 10)
+    rows = []
+    base_acc, base_t = train_mlp("bernoulli", (0.5, 0.5), sizes, data,
+                                 steps=steps)
+    for p in (0.3, 0.5, 0.7):
+        acc_b, t_b = train_mlp("bernoulli", (p, p), sizes, data, steps=steps)
+        for mode in ("rdp", "tdp"):
+            acc, t = train_mlp(mode, (p, p), sizes, data, steps=steps)
+            rows.append({
+                "rate": p, "mode": mode, "acc": round(acc, 4),
+                "acc_bernoulli": round(acc_b, 4),
+                "acc_delta": round(acc - acc_b, 4),
+                "t_step_ms": round(t * 1e3, 2),
+                "t_bernoulli_ms": round(t_b * 1e3, 2),
+                "speedup": round(t_b / t, 3),
+            })
+    emit(rows, out)
+    return rows
+
+
+def table1(steps: int, out: str | None):
+    data = synthetic_mnist()
+    p = 0.7
+    rows = []
+    for h1, h2 in ((1024, 64), (1024, 1024), (2048, 2048), (4096, 4096)):
+        sizes = (784, h1, h2, 10)
+        acc_b, t_b = train_mlp("bernoulli", (p, p), sizes, data, steps=steps)
+        for mode in ("rdp", "tdp"):
+            acc, t = train_mlp(mode, (p, p), sizes, data, steps=steps)
+            rows.append({
+                "network": f"{h1}x{h2}", "mode": mode,
+                "acc": round(acc, 4), "acc_delta": round(acc - acc_b, 4),
+                "t_step_ms": round(t * 1e3, 2),
+                "speedup": round(t_b / t, 3),
+            })
+    emit(rows, out)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--table1", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    steps = 60 if args.quick else args.steps
+    if args.table1:
+        return table1(steps, args.out)
+    return fig4(steps, args.out)
+
+
+if __name__ == "__main__":
+    main()

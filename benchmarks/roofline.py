@@ -1,0 +1,128 @@
+"""§Roofline aggregation: read the dry-run cell JSONs and print the
+three-term roofline table, per (arch × shape × mesh), with
+
+  MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per-chip equivalents
+  usefulness  = MODEL_FLOPS / HLO_FLOPs (remat/replication waste detector)
+
+  python -m benchmarks.roofline [--dir experiments/dryrun] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from .common import emit
+
+
+def count_params(cfg) -> tuple[float, float]:
+    """(total, active) parameter counts from the config arithmetic."""
+    d, L = cfg.d_model, cfg.n_layers
+    if cfg.mla:
+        attn = (d * cfg.q_lora + cfg.q_lora * cfg.n_heads *
+                (cfg.qk_nope + cfg.qk_rope) +
+                d * (cfg.kv_lora + cfg.qk_rope) +
+                cfg.kv_lora * cfg.n_heads * (cfg.qk_nope + cfg.v_head_dim) +
+                cfg.n_heads * cfg.v_head_dim * d)
+    else:
+        attn = d * cfg.n_heads * cfg.head_dim * 2 + \
+            d * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.family == "ssm":
+        di = cfg.ssm_expand * d
+        mix = d * (2 * di + 2 * cfg.ssm_state + di // cfg.ssm_headdim) + di * d
+        layer_tot = mix
+        layer_act = mix
+        n_attn_layers = 0
+    else:
+        layer_tot = layer_act = attn
+        n_attn_layers = L
+    ffn_dense = 3 * d * cfg.d_ff
+    tot = act = 0.0
+    for i in range(L):
+        kind = cfg.layer_kind(i)
+        if kind == "ssm":
+            di = cfg.ssm_expand * d
+            mix = d * (2 * di + 2 * cfg.ssm_state + di // cfg.ssm_headdim) + di * d
+            tot += mix
+            act += mix
+        elif kind == "moe":
+            e = 3 * d * cfg.moe_d_ff
+            tot += attn + e * cfg.n_experts + d * cfg.n_experts
+            act += attn + e * cfg.top_k
+            if cfg.n_shared:
+                tot += 3 * d * (cfg.n_shared * cfg.moe_d_ff)
+                act += 3 * d * (cfg.n_shared * cfg.moe_d_ff)
+        else:
+            tot += attn + ffn_dense
+            act += attn + ffn_dense
+    if cfg.family == "hybrid":
+        # shared attn block params counted once
+        d2 = 2 * d
+        shared = d2 * cfg.n_heads * (d2 // cfg.n_heads) * 2 + \
+            d2 * cfg.n_kv_heads * (d2 // cfg.n_heads) + \
+            cfg.n_heads * (d2 // cfg.n_heads) * d + 3 * d * cfg.d_ff
+        tot += shared
+        act += shared
+    emb = cfg.vocab * d * (1 if cfg.tie_embeddings else 2)
+    tot += emb
+    act += emb
+    return tot, act
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (prefill) /
+    2·N_active·B (decode) — global, embedding-included."""
+    _, act = count_params(cfg)
+    if kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * act * toks
+    if kind == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2.0 * act * toks
+    return 2.0 * act * shape.global_batch   # decode: one token per seq
+
+
+def load_rows(dry_dir: Path, mesh: str):
+    rows = []
+    for f in sorted(dry_dir.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if not d.get("supported"):
+            continue
+        cfg = get_config(d["arch"])
+        shape = SHAPES[d["shape"]]
+        rt = d["roofline"]
+        n = d["n_chips"]
+        mf = model_flops(cfg, shape, d["kind"]) / n     # per chip
+        hlo_f = d["hlo_analysis"]["dot_flops"]
+        t_model = mf / PEAK_FLOPS_BF16
+        bound = max(rt["t_compute_s"], rt["t_memory_s"],
+                    rt["t_collective_s"])
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "t_compute_s": f"{rt['t_compute_s']:.3e}",
+            "t_memory_s": f"{rt['t_memory_s']:.3e}",
+            "t_collective_s": f"{rt['t_collective_s']:.3e}",
+            "bottleneck": rt["bottleneck"],
+            "model_flops_per_chip": f"{mf:.3e}",
+            "useful_fraction": round(mf / hlo_f, 3) if hlo_f else 0.0,
+            "roofline_fraction": round(t_model / bound, 3) if bound else 0.0,
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    rows = load_rows(Path(args.dir), args.mesh)
+    emit(rows, args.out)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark driver: one suite per paper table/figure + system benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--suite NAME]
+
+Suites:
+  fig4        MLP dropout-rate sweep (paper Fig. 4)
+  table1      MLP width sweep at p=0.7 (paper Table I)
+  table2      LSTM dropout sweep (paper Table II)
+  batch       LSTM batch-size scaling (paper Fig. 6b)
+  search      Algorithm 1 cost/quality
+  kernels     compact-vs-masked matmul micro-bench
+  roofline    aggregate dry-run roofline table (needs experiments/dryrun)
+
+Default is reduced-scale (CI-friendly on this single-core container);
+``--full`` reruns the paper sweeps at full steps/sizes.  The archived
+full-scale outputs live in experiments/paper/*.csv (same suites).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all")
+    ap.add_argument("--full", action="store_true",
+                    help="full steps/sizes (see experiments/paper/ for "
+                         "archived full-scale outputs)")
+    args = ap.parse_args(argv)
+
+    from . import kernel_bench, paper_lstm, paper_mlp, roofline, search_bench
+    q = [] if args.full else ["--quick"]
+    suites = {
+        "search": lambda: search_bench.main(q),
+        "kernels": lambda: kernel_bench.main(q),
+        "fig4": lambda: paper_mlp.main(q),
+        "table1": lambda: paper_mlp.main(["--table1"] + q),
+        "table2": lambda: paper_lstm.main(q),
+        "batch": lambda: paper_lstm.main(["--batch-sweep"] + q),
+        "roofline": lambda: roofline.main([]),
+    }
+    run = list(suites) if args.suite == "all" else [args.suite]
+    for name in run:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            suites[name]()
+        except FileNotFoundError as e:
+            print(f"[skip] {name}: {e}", flush=True)
+        print(f"=== {name} done in {time.time()-t0:.0f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

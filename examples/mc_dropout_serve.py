@@ -1,0 +1,59 @@
+"""Beyond-paper: Monte-Carlo dropout ensembling at inference using
+Approximate Random Dropout patterns.
+
+The paper treats dropout purely as a training regularizer; but because our
+patterns make dropped compute *free*, MC-dropout uncertainty estimation
+becomes cheaper than the dense model: each ensemble member runs at 1/dp of
+the FLOPs.  This demo compares predictive entropy of the pattern-ensemble
+vs the deterministic forward on a smoke LM.
+
+Run:  PYTHONPATH=src python examples/mc_dropout_serve.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.sampler import build_schedule
+from repro.models import init_lm, materialize
+from repro.models.layers import PatternArgs
+from repro.models.transformer import forward
+
+cfg = get_smoke("qwen2_1_5b")
+params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+rng = np.random.default_rng(0)
+tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 24)), jnp.int32)
+
+sched = build_schedule("rdp", 0.3, n_units_blocks=8, dp_max=8,
+                       block=cfg.pattern_nb)
+
+# deterministic forward
+logits_det, _ = forward(cfg, params, tokens)
+p_det = jax.nn.softmax(logits_det[:, -1], -1)
+
+# MC-pattern ensemble: T members, each a sampled (dp, b) sub-model at
+# 1/dp of the dense FLOPs
+T = 8
+probs = []
+flop_frac = 0.0
+for t in range(T):
+    pat, b = sched.sample(t)
+    pa = PatternArgs(dp=pat.dp, bias=b, kind="rdp", nb=cfg.pattern_nb)
+    logits, _ = forward(cfg, params, tokens, pa)
+    probs.append(jax.nn.softmax(logits[:, -1], -1))
+    flop_frac += 1.0 / pat.dp / T
+p_mc = jnp.stack(probs).mean(0)
+
+
+def entropy(p):
+    return float(-(p * jnp.log(p + 1e-9)).sum(-1).mean())
+
+
+print(f"ensemble of {T} pattern sub-models "
+      f"(mean FLOP fraction {flop_frac:.2f} of dense):")
+print(f"  deterministic predictive entropy: {entropy(p_det):.4f}")
+print(f"  MC-pattern    predictive entropy: {entropy(p_mc):.4f}")
+print(f"  (higher MC entropy = epistemic uncertainty surfaced; "
+      f"each member cost {flop_frac:.0%} of a dense forward)")
+disagree = float(jnp.abs(p_mc - p_det).sum(-1).mean())
+print(f"  mean L1(p_mc, p_det) = {disagree:.4f}")

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's technique end-to-end in 5 minutes on CPU.
+
+1. Search a dropout-pattern distribution K for target rate p (Algorithm 1).
+2. Verify the statistical equivalence claim (Eq. 2-3).
+3. Train a small LM with Approximate Random Dropout vs conventional
+   dropout and compare loss + per-step matmul FLOPs.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core.equivalence import check_equivalence
+from repro.core.sampler import build_schedule, identity_schedule
+from repro.data.pipeline import SyntheticLMData
+from repro.models import init_lm, materialize
+from repro.optim.optimizers import AdamW
+from repro.train.loop import Trainer, TrainerConfig
+
+TARGET_RATE = 0.5
+
+# -- 1. Algorithm 1: search the pattern distribution ------------------------
+sched = build_schedule("rdp", TARGET_RATE, n_units_blocks=8, dp_max=8,
+                       block=16, seed=0)
+print(f"searched K over dp=1..8: {np.round(sched.dist, 3)}")
+print(f"  support (compiled buckets): {sched.support()}")
+print(f"  expected FLOP fraction:     {sched.expected_flop_fraction():.3f}")
+
+# -- 2. statistical equivalence (the paper's Eq. 2-3 'proof') ----------------
+report = check_equivalence(sched, dim=128, target=TARGET_RATE, steps=2000)
+print(f"equivalence: global rate {report['global_rate']:.3f} "
+      f"(target {TARGET_RATE}), per-unit marginal uniform, "
+      f"MC max err {report['mc_max_err']:.4f}")
+
+# -- 3. train a small LM with and without the technique ----------------------
+cfg = get_smoke("qwen2_1_5b")
+data = SyntheticLMData(vocab=cfg.vocab, seq_len=64, global_batch=4)
+
+for name, schedule in [("approx-dropout", sched),
+                       ("no-dropout", identity_schedule())]:
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    trainer = Trainer(cfg, AdamW(), params, schedule=schedule,
+                      tcfg=TrainerConfig(steps=30, base_lr=1e-3,
+                                         log_every=10))
+    hist = trainer.run(data.batch)
+    print(f"[{name}] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"patterns used: {sorted({h['dp'] for h in hist})}")
+print("done — see examples/train_mlp_paper.py for the paper's own models.")

@@ -1,0 +1,70 @@
+"""Serving example: batched prefill + decode with the engine's KV caches.
+
+Loads a smoke-scale LM, prefills a batch of prompts, then greedily decodes
+tokens — demonstrating the prefill→decode cache handoff, ring-buffer local
+attention (gemma3) and SSM O(1) state (mamba2) with the same API.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-1b]
+      [--batch 4] [--prompt-len 24] [--gen 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke, normalize
+from repro.models import init_lm, materialize
+from repro.serve import engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_smoke(normalize(args.arch))
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    max_len = args.prompt_len + args.gen + 1
+
+    rng = np.random.default_rng(0)
+    if cfg.n_codebooks:
+        prompts = rng.integers(0, cfg.vocab,
+                               (args.batch, cfg.n_codebooks, args.prompt_len))
+    else:
+        prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+    prompts = jnp.asarray(prompts, jnp.int32)
+
+    t0 = time.perf_counter()
+    logits, cache = engine.prefill(cfg, params, prompts, max_len)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
+          f"{t_prefill*1e3:.1f} ms -> cache pos {int(cache['pos'])}")
+
+    decode = jax.jit(lambda p, c, t: engine.decode_step(cfg, p, c, t))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[..., None]
+    if cfg.n_codebooks:
+        tok = tok.reshape(args.batch, cfg.n_codebooks, 1)
+    generated = []
+    t0 = time.perf_counter()
+    for _ in range(args.gen):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[..., None]
+        if cfg.n_codebooks:
+            tok = tok.reshape(args.batch, cfg.n_codebooks, 1)
+        generated.append(np.asarray(tok)[..., 0])
+    jax.block_until_ready(logits)
+    t_dec = time.perf_counter() - t0
+    print(f"decode: {args.gen} steps in {t_dec*1e3:.1f} ms "
+          f"({t_dec/args.gen*1e3:.2f} ms/token incl. first-call compile)")
+    seq = np.stack(generated, -1)
+    print(f"greedy continuation (seq 0): {seq[0].ravel()[:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""End-to-end driver (deliverable b): train a ~100M-param LM for a few
+hundred steps with Approximate Random Dropout as a first-class feature —
+pattern search, bucketed executables, checkpointing, restart, watchdog.
+
+Run:  PYTHONPATH=src python examples/train_lm_e2e.py
+      [--steps 200] [--dropout 0.5] [--dim 512] [--layers 8]
+
+This is the CPU-scale version of the launcher
+(`python -m repro.launch.train --arch qwen2-1.5b --smoke ...` is the
+config-registry path; this example builds a custom ~100M model directly).
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_smoke
+from repro.core.sampler import build_schedule, identity_schedule
+from repro.data.pipeline import SyntheticLMData
+from repro.models import init_lm, materialize
+from repro.models.transformer import ModelConfig
+from repro.optim.optimizers import AdamW
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dropout", type=float, default=0.5)
+    ap.add_argument("--pattern", choices=["rdp", "tdp"], default="rdp")
+    ap.add_argument("--dim", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="lm-100m", family="dense", n_layers=args.layers,
+        d_model=args.dim, n_heads=8, n_kv_heads=4, head_dim=args.dim // 8,
+        d_ff=4 * args.dim, vocab=32768, tie_embeddings=True,
+        pattern_nb=32, attn_chunk=128, dtype="float32", remat=False)
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: {n_params/1e6:.1f}M params, "
+          f"{args.layers}L x {args.dim}d, vocab 32768")
+
+    if args.dropout > 0:
+        sched = build_schedule(args.pattern, args.dropout,
+                               n_units_blocks=32, dp_max=8,
+                               block=cfg.pattern_nb)
+        print(f"pattern distribution K: {sched.dist.round(3)} "
+              f"(E[FLOP fraction]={sched.expected_flop_fraction():.3f})")
+    else:
+        sched = identity_schedule()
+
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=args.seq,
+                           global_batch=args.batch)
+    trainer = Trainer(
+        cfg, AdamW(), params, schedule=sched,
+        tcfg=TrainerConfig(steps=args.steps, base_lr=3e-4, warmup=20,
+                           ckpt_every=50, ckpt_dir=args.ckpt_dir,
+                           log_every=20))
+    t0 = time.time()
+    hist = trainer.run(data.batch)
+    dt = time.time() - t0
+    print(f"\n{len(hist)} steps in {dt:.0f}s "
+          f"({dt/max(len(hist),1)*1e3:.0f} ms/step avg incl. compiles)")
+    print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}; "
+          f"buckets compiled: {len(trainer._buckets)}; "
+          f"stragglers: {trainer.watchdog.flagged}")
+    print(f"checkpoints in {args.ckpt_dir} (restart me to auto-resume)")
+
+
+if __name__ == "__main__":
+    main()

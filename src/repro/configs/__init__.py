@@ -1,0 +1,115 @@
+"""Architecture registry: the 10 assigned archs + the paper's own models.
+
+Each ``<arch>.py`` exports ``CONFIG`` (the exact assigned configuration),
+``SMOKE`` (a reduced same-family config for CPU tests) and an ``ArchSpec``
+binding parallelism profile + training microbatching.  ``input_specs``
+builds ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+ARCH_IDS = [
+    "qwen2_5_14b", "gemma3_1b", "qwen2_1_5b", "command_r_plus_104b",
+    "mamba2_1_3b", "internvl2_2b", "qwen3_moe_30b_a3b", "deepseek_v3_671b",
+    "zamba2_7b", "musicgen_large",
+]
+# public ids use dashes; module names use underscores
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    smoke: ModelConfig
+    profile: str = "tp"             # parallelism profile (train)
+    serve_profile: str = "serve_sp"
+    microbatches: int = 8           # grad-accum splits for train_4k
+    long_ok: bool = False           # run long_500k (sub-quadratic archs only)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def normalize(arch: str) -> str:
+    """'qwen2.5-14b' / 'qwen2-5-14b' / 'qwen2_5_14b' all resolve."""
+    cand = arch.replace(".", "_").replace("-", "_")
+    if cand in ARCH_IDS:
+        return cand
+    matches = [a for a in ARCH_IDS if a.startswith(cand) or cand.startswith(a)]
+    if len(matches) == 1:
+        return matches[0]
+    raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+
+
+def get_spec(arch: str) -> ArchSpec:
+    mod = importlib.import_module(f"repro.configs.{normalize(arch)}")
+    return mod.SPEC
+
+
+def get_config(arch: str) -> ModelConfig:
+    return get_spec(arch).config
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    return get_spec(arch).smoke
+
+
+def cell_supported(arch: str, shape: str) -> tuple[bool, str]:
+    """(supported, reason-if-not) for an (arch × shape) dry-run cell."""
+    spec = get_spec(arch)
+    if shape == "long_500k" and not spec.long_ok:
+        return False, ("pure full-attention arch: 524k-token decode is the "
+                       "quadratic regime long_500k excludes (DESIGN.md §4)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, *,
+                microbatches: int = 1) -> dict:
+    """ShapeDtypeStruct stand-ins for one dry-run cell (no allocation).
+
+    train:   {tokens, labels[, vision_embeds]} at [B, S] (microbatch-split
+             happens inside train_step).
+    prefill: {tokens[, vision_embeds]}.
+    decode:  {tokens (one step), cache, pos} — cache specs come from
+             serve.init_cache_abstract.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.n_codebooks:
+        tok = jax.ShapeDtypeStruct((B, cfg.n_codebooks, S), i32)
+    elif cfg.vision_tokens and shape.kind != "decode":
+        tok = jax.ShapeDtypeStruct((B, S - cfg.vision_tokens), i32)
+    else:
+        tok = jax.ShapeDtypeStruct((B, S), i32)
+
+    out = {"tokens": tok}
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct(tok.shape, i32)
+    if cfg.vision_tokens and shape.kind != "decode":
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.vision_dim), cfg.jdtype)
+    if shape.kind == "decode":
+        step_tok = ((B, cfg.n_codebooks, 1) if cfg.n_codebooks else (B, 1))
+        out["tokens"] = jax.ShapeDtypeStruct(step_tok, i32)
+    return out

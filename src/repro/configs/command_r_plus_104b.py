@@ -1,0 +1,17 @@
+"""Command R+ 104B — large dense GQA, no biases [hf:CohereForAI/c4ai-command-r-plus].
+FSDP+TP profile (weights sharded over data too — 104B doesn't fit TP16)."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense", n_layers=64, d_model=12288,
+    n_heads=96, n_kv_heads=8, head_dim=128, d_ff=33792, vocab=256000,
+    rope_theta=1e6, pattern_nb=128)
+
+SMOKE = ModelConfig(
+    name="command-r-plus-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=8, n_kv_heads=2, head_dim=8, d_ff=256, vocab=512,
+    pattern_nb=8, attn_chunk=64, dtype="float32", remat=False)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="fsdp_tp",
+                microbatches=16)

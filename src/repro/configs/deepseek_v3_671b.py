@@ -1,0 +1,24 @@
+"""DeepSeek-V3 671B — MLA + 1 shared + 256 routed top-8 MoE + MTP
+[arXiv:2412.19437].  First 3 layers dense (d_ff 18432); experts d_ff 2048.
+EP across the full pod (ep_full profile): 256 experts / 256 chips."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe", n_layers=61, d_model=7168,
+    n_heads=128, n_kv_heads=128, head_dim=192, d_ff=18432, vocab=129280,
+    n_experts=256, top_k=8, moe_d_ff=2048, n_shared=1, n_dense_layers=3,
+    mla=True, q_lora=1536, kv_lora=512, qk_nope=128, qk_rope=64,
+    v_head_dim=128, mtp=True, rope_theta=1e6, pattern_nb=128,
+    capacity_factor=1.25, moe_impl="ep_shardmap")
+
+SMOKE = ModelConfig(
+    name="deepseek-v3-smoke", family="moe", n_layers=3, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=24, d_ff=256, vocab=512,
+    n_experts=8, top_k=2, moe_d_ff=64, n_shared=1, n_dense_layers=1,
+    mla=True, q_lora=32, kv_lora=16, qk_nope=16, qk_rope=8, v_head_dim=16,
+    mtp=True, pattern_nb=8, attn_chunk=64, dtype="float32", remat=False,
+    capacity_factor=8.0)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="ep_full_sp",
+                serve_profile="serve_sp_ep", microbatches=16)

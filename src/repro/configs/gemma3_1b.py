@@ -1,0 +1,19 @@
+"""Gemma3-1B — 5:1 local:global sliding-window attention, 256k vocab
+[hf:google/gemma-3-1b-pt].  head_dim=256 (Gemma3 uses wide heads)."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="gemma3-1b", family="dense", n_layers=26, d_model=1152,
+    n_heads=4, n_kv_heads=1, head_dim=256, d_ff=6912, vocab=262144,
+    sliding_window=1024, global_every=6, rope_theta=1e6,
+    tie_embeddings=True, pattern_nb=128)
+
+SMOKE = ModelConfig(
+    name="gemma3-1b-smoke", family="dense", n_layers=6, d_model=64,
+    n_heads=4, n_kv_heads=1, head_dim=16, d_ff=256, vocab=512,
+    sliding_window=16, global_every=6, rope_theta=1e4, tie_embeddings=True,
+    pattern_nb=8, attn_chunk=64, dtype="float32", remat=False)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="tp_sp_attnseq", microbatches=4,
+                long_ok=True)

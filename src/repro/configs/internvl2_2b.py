@@ -1,0 +1,17 @@
+"""InternVL2-2B — InternViT frontend (STUB: precomputed patch embeddings)
++ InternLM2-1.8B backbone [arXiv:2404.16821]."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="internvl2-2b", family="dense", n_layers=24, d_model=2048,
+    n_heads=16, n_kv_heads=8, head_dim=128, d_ff=8192, vocab=92553,
+    rope_theta=1e6, vision_tokens=256, vision_dim=1024, pattern_nb=128)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=256, vocab=512,
+    vision_tokens=8, vision_dim=32, pattern_nb=8, attn_chunk=64,
+    dtype="float32", remat=False)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="tp", microbatches=4)

@@ -1,0 +1,18 @@
+"""Mamba2-1.3B — attention-free SSD (state-space duality) [arXiv:2405.21060]."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", family="ssm", n_layers=48, d_model=2048,
+    n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab=50280,
+    ssm_state=128, ssm_headdim=64, ssm_expand=2, d_conv=4,
+    tie_embeddings=True, ssd_chunk=256)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke", family="ssm", n_layers=2, d_model=64,
+    n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0, vocab=512,
+    ssm_state=16, ssm_headdim=16, ssm_expand=2, d_conv=4,
+    tie_embeddings=True, ssd_chunk=16, dtype="float32", remat=False)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="tp", microbatches=4,
+                long_ok=True)

@@ -1,0 +1,17 @@
+"""MusicGen-large — decoder-only over EnCodec tokens, 4 codebooks
+(delay-pattern handled by the data layer; frontend STUB) [arXiv:2306.05284]."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="musicgen-large", family="dense", n_layers=48, d_model=2048,
+    n_heads=32, n_kv_heads=32, head_dim=64, d_ff=8192, vocab=2048,
+    n_codebooks=4, rope_theta=1e4, pattern_nb=128)
+
+SMOKE = ModelConfig(
+    name="musicgen-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=16, d_ff=256, vocab=128,
+    n_codebooks=2, pattern_nb=8, attn_chunk=64, dtype="float32",
+    remat=False)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="tp", microbatches=8)

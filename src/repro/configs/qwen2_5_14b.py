@@ -1,0 +1,16 @@
+"""Qwen2.5-14B — dense GQA decoder with QKV bias [hf:Qwen/Qwen2.5-14B]."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b", family="dense", n_layers=48, d_model=5120,
+    n_heads=40, n_kv_heads=8, head_dim=128, d_ff=13824, vocab=152064,
+    qkv_bias=True, rope_theta=1e6, pattern_nb=128)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-14b-smoke", family="dense", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=256, vocab=512,
+    qkv_bias=True, rope_theta=1e4, pattern_nb=8, attn_chunk=64,
+    dtype="float32", remat=False)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="tp_sp_attnseq", microbatches=16)

@@ -1,0 +1,18 @@
+"""Qwen3-30B-A3B — 128-expert top-8 MoE, GQA kv=4 [hf:Qwen/Qwen3-30B-A3B]."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b", family="moe", n_layers=48, d_model=2048,
+    n_heads=32, n_kv_heads=4, head_dim=128, d_ff=6144, vocab=151936,
+    n_experts=128, top_k=8, moe_d_ff=768, n_shared=0, n_dense_layers=0,
+    rope_theta=1e6, pattern_nb=128, moe_impl="ep_shardmap")
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-smoke", family="moe", n_layers=2, d_model=64,
+    n_heads=4, n_kv_heads=2, head_dim=16, d_ff=256, vocab=512,
+    n_experts=8, top_k=2, moe_d_ff=64, pattern_nb=8, attn_chunk=64,
+    dtype="float32", remat=False, capacity_factor=8.0)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="tp_sp",
+                serve_profile="serve_sp_ep", microbatches=16)

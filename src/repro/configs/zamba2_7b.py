@@ -1,0 +1,19 @@
+"""Zamba2-7B — Mamba2 backbone + shared attention block every 6th slot
+(weights reused at all 13 application sites) [arXiv:2411.15242]."""
+from repro.models.transformer import ModelConfig
+from . import ArchSpec
+
+CONFIG = ModelConfig(
+    name="zamba2-7b", family="hybrid", n_layers=81, d_model=3584,
+    n_heads=32, n_kv_heads=32, head_dim=112, d_ff=14336, vocab=32000,
+    ssm_state=64, ssm_headdim=64, ssm_expand=2, d_conv=4, hybrid_period=6,
+    rope_theta=1e4, pattern_nb=128, ssd_chunk=256)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid", n_layers=6, d_model=64,
+    n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256, vocab=512,
+    ssm_state=16, ssm_headdim=16, ssm_expand=2, d_conv=4, hybrid_period=6,
+    pattern_nb=8, attn_chunk=64, ssd_chunk=16, dtype="float32", remat=False)
+
+SPEC = ArchSpec(config=CONFIG, smoke=SMOKE, profile="tp", microbatches=8,
+                long_ok=True)

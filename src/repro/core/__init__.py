@@ -1,0 +1,19 @@
+"""Approximate Random Dropout — the paper's core contribution.
+
+Public API:
+  patterns    — RDP/TDP pattern algebra (keep indices, masks, compact shapes)
+  search      — Algorithm 1: SGD-based search for the pattern distribution K
+  sampler     — per-step (dp, b) sampling, pattern bucketing
+  dropout     — Bernoulli baseline + compact RDP/TDP application
+  equivalence — statistical-equivalence verifier (Eq. 2-3)
+"""
+from . import dropout, equivalence, patterns, sampler, search
+from .patterns import Pattern
+from .sampler import PatternSchedule, build_schedule, identity_schedule
+from .search import SearchConfig, search_distribution
+
+__all__ = [
+    "patterns", "search", "sampler", "dropout", "equivalence",
+    "Pattern", "PatternSchedule", "build_schedule", "identity_schedule",
+    "SearchConfig", "search_distribution",
+]

@@ -1,0 +1,138 @@
+"""Dropout application layer: conventional Bernoulli + approximate (RDP/TDP).
+
+Layers never materialize a mask on the fast path — they call
+``rdp_ffn_apply`` / ``tdp_matmul_apply`` which shrink the matmuls.  The
+mask-multiply semantics live in ``*_oracle`` twins used by tests and by the
+conventional-dropout baseline (the thing the paper compares against).
+
+Inverted-dropout scaling: kept activations are multiplied by ``dp``
+(= 1/keep_prob) at train time, nothing at eval — so eval uses dp=1.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import patterns as P
+
+
+# --------------------------------------------------------------------------
+# Conventional random dropout (the baseline, paper §II-C)
+# --------------------------------------------------------------------------
+
+def bernoulli_dropout(rng: jax.Array, x: jax.Array, rate: float) -> jax.Array:
+    """Standard inverted dropout: zero each element w.p. ``rate``."""
+    if rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(rng, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RDP applied to an FFN block (neuron dropout)
+# --------------------------------------------------------------------------
+
+def rdp_ffn_apply(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
+                  dp: int, b: jax.Array | int, *,
+                  act: Callable[[jax.Array], jax.Array] = jax.nn.relu,
+                  w_gate: jax.Array | None = None,
+                  b_up: jax.Array | None = None,
+                  block: int = P.LANE,
+                  scale: bool = True) -> jax.Array:
+    """Compact FFN under RDP: only kept hidden neurons are computed.
+
+    x: [..., d_in]; w_up: [d_in, d_ff]; w_down: [d_ff, d_out].
+    Optional SwiGLU gate w_gate: [d_in, d_ff].  Returns [..., d_out].
+
+    FLOPs = 1/dp of the dense FFN; dropped weight blocks are never read.
+    """
+    if dp == 1:
+        h = x @ w_up
+        if b_up is not None:
+            h = h + b_up
+        h = act(h) if w_gate is None else act(h) * (x @ w_gate)
+        return h @ w_down
+
+    idx = P.kept_unit_indices(w_up.shape[-1], dp, b, block)
+    w_up_c = jnp.take(w_up, idx, axis=-1)
+    h = x @ w_up_c
+    if b_up is not None:
+        h = h + jnp.take(b_up, idx, axis=-1)
+    if w_gate is None:
+        h = act(h)
+    else:
+        h = act(h) * (x @ jnp.take(w_gate, idx, axis=-1))
+    if scale:
+        h = h * dp  # inverted-dropout scale, folded before the down proj
+    w_down_c = jnp.take(w_down, idx, axis=0)
+    return h @ w_down_c
+
+
+def rdp_ffn_oracle(x, w_up, w_down, dp, b, *, act=jax.nn.relu, w_gate=None,
+                   b_up=None, block: int = P.LANE, scale: bool = True):
+    """Mask-multiply semantics (what conventional frameworks do, Fig. 1a)."""
+    h = x @ w_up
+    if b_up is not None:
+        h = h + b_up
+    h = act(h) if w_gate is None else act(h) * (x @ w_gate)
+    mask = P.rdp_mask(w_up.shape[-1], dp, b, block, h.dtype)
+    h = h * mask
+    if scale and dp > 1:
+        h = h * dp
+    return h @ w_down
+
+
+# --------------------------------------------------------------------------
+# TDP applied to a single matmul (synapse / DropConnect-style dropout)
+# --------------------------------------------------------------------------
+
+def tdp_matmul_apply(x: jax.Array, w: jax.Array, dp: int, b: jax.Array | int,
+                     *, tile: int = P.DEFAULT_TILE,
+                     scale: bool = True) -> jax.Array:
+    """y = x @ (w ∘ tdp_mask) computed by skipping dropped tiles.
+
+    XLA path: reshape to tile grid, roll each tile-column so its kept tiles
+    land on slots {0..tr/dp-1}, slice, contract.  The Pallas fast path
+    (kernels/tdp_matmul.py) does the same via BlockSpec index_map without
+    the gather.  x: [..., K]; w: [K, N] with dp | (K/tile).
+    """
+    if dp == 1:
+        return x @ w
+    K, N = w.shape
+    tr, tc = P.num_blocks(K, tile), P.num_blocks(N, tile)
+    if tr % dp != 0:
+        raise ValueError(
+            f"TDP requires dp | (K/tile): K={K}, tile={tile}, dp={dp}")
+    kept = tr // dp
+    # w as [tr, tile, tc, tile] → per tile-column j keep rows i ≡ (b-j) mod dp
+    wt = w.reshape(tr, tile, tc, tile)
+    j = jnp.arange(tc, dtype=jnp.int32)
+    base = (jnp.asarray(b, jnp.int32) - j) % dp          # [tc]
+    slot = jnp.arange(kept, dtype=jnp.int32)             # [kept]
+    rows = base[None, :] + slot[:, None] * dp            # [kept, tc]
+    # gather kept tiles → [kept, tile, tc, tile]
+    w_kept = wt[rows, :, j[None, :], :]                  # [kept, tc, tile, tile]
+    w_kept = jnp.transpose(w_kept, (0, 2, 1, 3))         # [kept, tile, tc, tile]
+
+    xt = x.reshape(*x.shape[:-1], tr, tile)
+    # x tiles needed per (slot, j): same rows grid
+    x_kept = jnp.take(xt, rows.reshape(-1), axis=-2)     # [..., kept*tc, tile]
+    x_kept = x_kept.reshape(*x.shape[:-1], kept, tc, tile)
+    y = jnp.einsum("...kjt,ktju->...ju", x_kept, w_kept)
+    y = y.reshape(*x.shape[:-1], N)
+    if scale:
+        y = y * dp
+    return y.astype(x.dtype)
+
+
+def tdp_matmul_oracle(x, w, dp, b, *, tile: int = P.DEFAULT_TILE,
+                      scale: bool = True):
+    """Mask-multiply semantics for TDP."""
+    mask = P.tdp_mask(w.shape[0], w.shape[1], dp, b, tile, w.dtype)
+    y = x @ (w * mask)
+    if scale and dp > 1:
+        y = y * dp
+    return y.astype(x.dtype)

@@ -1,0 +1,83 @@
+"""Statistical-equivalence verifier (paper Eq. 2–3).
+
+Claim: with ``dp ~ K`` and bias ``b ~ Uniform{0..dp-1}``, the marginal drop
+probability of every single unit equals the global rate
+
+    p_n = Σ_i k_i · (i-1)/i  =  p_g  ≈  p_target.
+
+This module verifies the claim two ways:
+
+* **exactly** — for each unit position, sum over (dp, b) of
+  P(dp)·P(b)·[unit dropped under (dp, b)]; asserts the marginal is *uniform*
+  across positions and equals p_g.
+* **Monte-Carlo** — drive the real ``PatternSchedule`` for T steps and count
+  empirical per-unit drop frequencies (this also exercises the sampler's
+  determinism path).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .patterns import np_kept_indices
+from .sampler import PatternSchedule
+
+
+def exact_unit_drop_marginals(dist: np.ndarray, dim: int, block: int = 1
+                              ) -> np.ndarray:
+    """P(unit u dropped) for every u, marginalized over dp ~ dist and b
+    uniform — computed exactly.  Requires divisor periods (as the sampler
+    enforces); under that constraint each unit is kept by exactly 1/dp of
+    the biases, giving a constant marginal."""
+    nb = dim // block
+    drop = np.zeros(dim, np.float64)
+    for i, k in enumerate(np.asarray(dist, np.float64)):
+        dp = i + 1
+        if k <= 0:
+            continue
+        if nb % dp != 0:
+            raise ValueError(f"period {dp} does not divide {nb} blocks")
+        per_b = np.ones(dim, np.float64)
+        for b in range(dp):
+            kept = np_kept_indices(dim, dp, b, block)
+            m = np.ones(dim, np.float64)
+            m[kept] = 0.0
+            per_b += m
+        per_b = (per_b - 1.0) / dp  # mean over biases
+        drop += k * per_b
+    return drop
+
+
+def empirical_unit_drop_marginals(sched: PatternSchedule, dim: int,
+                                  steps: int = 4000) -> np.ndarray:
+    """Monte-Carlo per-unit drop frequency over ``steps`` sampled patterns."""
+    counts = np.zeros(dim, np.float64)
+    for t in range(steps):
+        pat, b = sched.sample(t)
+        kept = np_kept_indices(dim, pat.dp, b, sched.block)
+        m = np.ones(dim, np.float64)
+        m[kept] = 0.0
+        counts += m
+    return counts / steps
+
+
+def check_equivalence(sched: PatternSchedule, dim: int, target: float,
+                      steps: int = 4000, mc_tol: float = 0.03,
+                      exact_tol: float = 1e-9) -> dict:
+    """Returns a report dict; raises AssertionError on violation."""
+    exact = exact_unit_drop_marginals(sched.dist, dim, sched.block)
+    p_g = float(np.dot(sched.dist,
+                       (np.arange(1, sched.n_patterns + 1) - 1.0)
+                       / np.arange(1, sched.n_patterns + 1)))
+    # (1) marginal is uniform across units and equals the global rate
+    assert np.allclose(exact, exact[0], atol=exact_tol), \
+        "per-unit marginals are not uniform"
+    assert abs(exact[0] - p_g) < exact_tol, \
+        f"marginal {exact[0]} != global rate {p_g}"
+    # (2) the searched distribution hits the target rate
+    rate_err = abs(p_g - target)
+    # (3) Monte-Carlo agrees
+    emp = empirical_unit_drop_marginals(sched, dim, steps)
+    mc_err = float(np.max(np.abs(emp - p_g)))
+    assert mc_err < mc_tol, f"Monte-Carlo marginal off by {mc_err}"
+    return {"global_rate": p_g, "target": target, "rate_err": rate_err,
+            "mc_max_err": mc_err, "uniform": True}

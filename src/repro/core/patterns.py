@@ -1,0 +1,210 @@
+"""Structured dropout patterns (the paper's §III-A/B).
+
+A *dropout pattern* is the combination of dropped units for one training
+iteration.  Two families, both parameterized by a period ``dp`` and a bias
+``b`` in ``{0, ..., dp-1}`` (the paper uses 1-based bias; we use 0-based):
+
+* **RDP** (row-based): keep every ``dp``-th neuron starting at ``b`` — i.e.
+  keep index ``i`` iff ``(i - b) % dp == 0`` — and drop the other
+  ``(dp-1)/dp``.  Dropping a neuron means dropping the corresponding row of
+  the next layer's weight matrix (all its synapses), so the surviving rows
+  form a *compact* matrix and the matmul shrinks by ``1/dp``.
+
+* **TDP** (tile-based): tile the weight matrix into ``tile × tile`` blocks,
+  linearize the tile grid row-major, and keep every ``dp``-th tile starting
+  at ``b``.  This is the DropConnect-style synapse analogue with structural
+  regularity.
+
+TPU adaptation (DESIGN.md §2): the fast paths operate at *block* granularity
+(``group`` neurons per block for RDP, ``tile×tile`` for TDP) so kept
+sub-matrices stay MXU/lane aligned.  ``group=1`` recovers the paper's exact
+neuron-granular semantics (used by the XLA gather path and the oracles).
+
+All functions are shape-static in ``dp`` (pattern bucketing: ``dp`` selects
+the executable, ``b`` is traced), which is what makes the technique jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PatternKind = Literal["rdp", "tdp"]
+
+# Default TPU-aligned granularities (DESIGN.md §2).
+LANE = 128
+DEFAULT_TILE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    """A concrete dropout pattern: (kind, dp, block granularity).
+
+    ``dp`` is static (selects the compiled executable); the bias ``b`` is a
+    runtime value and deliberately *not* part of this dataclass.
+    """
+
+    kind: PatternKind
+    dp: int
+    block: int = LANE  # neurons per RDP group, or tile edge for TDP
+
+    def __post_init__(self):
+        if self.dp < 1:
+            raise ValueError(f"dp must be >= 1, got {self.dp}")
+        if self.block < 1:
+            raise ValueError(f"block must be >= 1, got {self.block}")
+
+    @property
+    def keep_fraction(self) -> float:
+        return 1.0 / self.dp
+
+    @property
+    def drop_rate(self) -> float:
+        """Global dropout rate of this pattern: (dp-1)/dp."""
+        return (self.dp - 1) / self.dp
+
+    @property
+    def scale(self) -> float:
+        """Inverted-dropout scale for kept units (1/keep_prob = dp)."""
+        return float(self.dp)
+
+
+def num_blocks(dim: int, block: int) -> int:
+    if dim % block != 0:
+        raise ValueError(f"dim {dim} not divisible by block {block}")
+    return dim // block
+
+
+def kept_block_count(n_blocks: int, dp: int) -> int:
+    """Number of kept blocks — independent of bias so shapes are static.
+
+    We require ``n_blocks % dp == 0`` for exact-period patterns; the sampler
+    only draws ``dp`` from divisors-compatible sets (see ``valid_periods``).
+    """
+    if n_blocks % dp != 0:
+        raise ValueError(f"n_blocks {n_blocks} not divisible by dp {dp}")
+    return n_blocks // dp
+
+
+def valid_periods(n_blocks: int, dp_max: int) -> list[int]:
+    """Periods usable for a dimension with ``n_blocks`` blocks: divisors of
+    n_blocks up to dp_max.  Guarantees bias-independent kept counts."""
+    return [d for d in range(1, dp_max + 1) if n_blocks % d == 0]
+
+
+def kept_block_indices(n_blocks: int, dp: int, b: jax.Array | int) -> jax.Array:
+    """Indices of kept blocks: ``(b + j*dp) % n_blocks`` for j in [0, n/dp).
+
+    ``b`` may be a traced scalar; the output shape depends only on
+    (n_blocks, dp) — static under pattern bucketing.  The modulo wrap keeps
+    any b in [0, n_blocks) valid (biases beyond dp alias to b % dp followed
+    by a rotation, which preserves the kept *set* for divisor periods).
+    """
+    k = kept_block_count(n_blocks, dp)
+    j = jnp.arange(k, dtype=jnp.int32)
+    return (jnp.asarray(b, jnp.int32) + j * dp) % n_blocks
+
+
+def kept_unit_indices(dim: int, dp: int, b: jax.Array | int,
+                      block: int = 1) -> jax.Array:
+    """Flat unit indices kept by an RDP pattern at ``block`` granularity."""
+    nb = num_blocks(dim, block)
+    blocks = kept_block_indices(nb, dp, b)  # [nb/dp]
+    offs = jnp.arange(block, dtype=jnp.int32)
+    return (blocks[:, None] * block + offs[None, :]).reshape(-1)
+
+
+def rdp_mask(dim: int, dp: int, b: jax.Array | int, block: int = 1,
+             dtype=jnp.float32) -> jax.Array:
+    """Dense 0/1 keep-mask over ``dim`` units (oracle semantics)."""
+    nb = num_blocks(dim, block)
+    i = jnp.arange(nb, dtype=jnp.int32)
+    keep_blocks = ((i - jnp.asarray(b, jnp.int32)) % dp) == 0
+    return jnp.repeat(keep_blocks.astype(dtype), block)
+
+
+def tdp_mask(rows: int, cols: int, dp: int, b: jax.Array | int,
+             tile: int = DEFAULT_TILE, dtype=jnp.float32) -> jax.Array:
+    """Dense 0/1 keep-mask over a (rows, cols) weight matrix for TDP.
+
+    TPU adaptation (DESIGN.md §2): tiles are kept on a *diagonal* period —
+    tile (i, j) is kept iff ``(i + j - b) % dp == 0`` — instead of the
+    paper's row-major linearization.  The paper's order gives ragged
+    per-column kept counts (fine for the GPU's per-PE accumulation, fatal
+    for static-shape TPU matmuls); the diagonal scheme keeps exactly
+    ``tr/dp`` tiles in every tile-column (requires ``dp | rows/tile``),
+    preserving the global rate (dp-1)/dp and per-unit marginal uniformity.
+    """
+    tr, tc = num_blocks(rows, tile), num_blocks(cols, tile)
+    i = jnp.arange(tr, dtype=jnp.int32)[:, None]
+    j = jnp.arange(tc, dtype=jnp.int32)[None, :]
+    keep = (((i + j - jnp.asarray(b, jnp.int32)) % dp) == 0).astype(dtype)
+    return jnp.repeat(jnp.repeat(keep, tile, axis=0), tile, axis=1)
+
+
+def tdp_kept_row_tile(j: jax.Array | int, slot: jax.Array | int, dp: int,
+                      b: jax.Array | int, tr: int):
+    """Row-tile index of the ``slot``-th kept tile in tile-column ``j``.
+
+    Kept row-tiles in column j are { i : i ≡ (b - j) (mod dp) } =
+    ((b - j) mod dp) + slot*dp, slot ∈ [0, tr/dp).
+    """
+    base = (jnp.asarray(b, jnp.int32) - jnp.asarray(j, jnp.int32)) % dp
+    return base + jnp.asarray(slot, jnp.int32) * dp
+
+
+# --------------------------------------------------------------------------
+# Compact gather/scatter application (the XLA path; kernels/ has the Pallas
+# fast path).  These are the building blocks layers use.
+# --------------------------------------------------------------------------
+
+def compact_columns(w: jax.Array, dp: int, b: jax.Array | int,
+                    block: int = LANE) -> jax.Array:
+    """Gather kept column-blocks of ``w`` [in, out] → [in, out/dp].
+
+    Used for the up-projection whose *outputs* are the dropped neurons.
+    """
+    idx = kept_unit_indices(w.shape[-1], dp, b, block)
+    return jnp.take(w, idx, axis=-1)
+
+
+def compact_rows(w: jax.Array, dp: int, b: jax.Array | int,
+                 block: int = LANE) -> jax.Array:
+    """Gather kept row-blocks of ``w`` [in, out] → [in/dp, out].
+
+    Used for the down-projection whose *inputs* are the dropped neurons.
+    """
+    idx = kept_unit_indices(w.shape[0], dp, b, block)
+    return jnp.take(w, idx, axis=0)
+
+
+def scatter_units(compact: jax.Array, dim: int, dp: int, b: jax.Array | int,
+                  block: int = LANE) -> jax.Array:
+    """Scatter a compact activation [..., dim/dp] back to [..., dim] with
+    zeros in dropped positions (paper: "the rest of the Output Matrix is set
+    to zero by default")."""
+    idx = kept_unit_indices(dim, dp, b, block)
+    out_shape = compact.shape[:-1] + (dim,)
+    out = jnp.zeros(out_shape, compact.dtype)
+    return out.at[..., idx].set(compact)
+
+
+def pattern_flop_fraction(p: Pattern) -> float:
+    """Fraction of the dense matmul FLOPs the pattern actually executes."""
+    return 1.0 / p.dp
+
+
+def max_submodels_rdp(dim: int, block: int, dp_max: int) -> int:
+    """Paper §III-A: number of distinct sub-models = sum over valid dp of the
+    number of distinct biases (= dp)."""
+    return sum(valid_periods(num_blocks(dim, block), dp_max))
+
+
+def np_kept_indices(dim: int, dp: int, b: int, block: int = 1) -> np.ndarray:
+    """NumPy twin of kept_unit_indices for host-side planning."""
+    nb = dim // block
+    blocks = (b + np.arange(nb // dp) * dp) % nb
+    return (blocks[:, None] * block + np.arange(block)[None, :]).reshape(-1)

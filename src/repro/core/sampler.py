@@ -1,0 +1,86 @@
+"""Per-iteration dropout-pattern sampling & pattern bucketing (paper §III-D).
+
+Each training step samples a pattern ``dp ~ K`` and a bias
+``b ~ Uniform{0..dp-1}``.  Under jit, ``dp`` must be static (it determines the
+compact shapes), so the sampler lives on the *host* and the trainer keeps one
+compiled executable per distinct dp ("pattern bucketing", DESIGN.md §2).
+``b`` is folded from the step number and passed as a traced scalar — no
+recompilation across biases.
+
+Determinism/scale: both draws are pure functions of (seed, step), so every
+host in a multi-controller deployment computes the same pattern with zero
+communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .patterns import Pattern, PatternKind, valid_periods
+from .search import SearchConfig, search_distribution
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSchedule:
+    """Samples (dp, b) per step from a searched distribution K."""
+
+    kind: PatternKind
+    dist: np.ndarray                 # K over dp = 1..N
+    block: int = 128
+    seed: int = 0
+
+    def __post_init__(self):
+        d = np.asarray(self.dist, np.float64)
+        if d.ndim != 1 or d.size < 1:
+            raise ValueError("dist must be a 1-D categorical distribution")
+        if not np.isclose(d.sum(), 1.0, atol=1e-5):
+            raise ValueError(f"dist must sum to 1, got {d.sum()}")
+        object.__setattr__(self, "dist", d / d.sum())
+
+    @property
+    def n_patterns(self) -> int:
+        return int(self.dist.size)
+
+    def sample(self, step: int) -> tuple[Pattern, int]:
+        """Deterministic (Pattern, bias) for a step."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, int(step)]))
+        dp = int(rng.choice(self.n_patterns, p=self.dist)) + 1
+        b = int(rng.integers(0, dp))  # uniform over {0..dp-1}
+        return Pattern(self.kind, dp, self.block), b
+
+    def support(self) -> list[int]:
+        """Distinct dp values with nonzero probability = executable buckets."""
+        return [i + 1 for i, k in enumerate(self.dist) if k > 1e-9]
+
+    def expected_flop_fraction(self) -> float:
+        """E[1/dp] — average fraction of dense FLOPs actually executed."""
+        dps = np.arange(1, self.n_patterns + 1, dtype=np.float64)
+        return float(np.dot(self.dist, 1.0 / dps))
+
+
+def build_schedule(kind: PatternKind, target_rate: float, n_units_blocks: int,
+                   dp_max: int = 8, block: int = 128, seed: int = 0,
+                   lam1: float = 0.85, lam2: float = 0.15) -> PatternSchedule:
+    """Search K (Alg. 1) restricted to divisor periods of the blocked dim and
+    wrap it in a schedule.
+
+    ``n_units_blocks``: number of pattern blocks in the dimension dropout is
+    applied to (e.g. d_ff/128 for group-RDP on an FFN).  Restricting to
+    divisors keeps kept-counts bias-independent → static shapes.
+    """
+    allowed = tuple(valid_periods(n_units_blocks, dp_max))
+    if allowed == (1,):
+        raise ValueError(
+            f"dimension with {n_units_blocks} blocks admits no nontrivial "
+            f"period <= {dp_max}; increase dp_max or change blocking")
+    cfg = SearchConfig(target_rate=target_rate, n_patterns=dp_max,
+                       lam1=lam1, lam2=lam2, allowed=allowed)
+    k, _, _ = search_distribution(cfg, seed=seed)
+    return PatternSchedule(kind=kind, dist=k, block=block, seed=seed)
+
+
+def identity_schedule(kind: PatternKind = "rdp", block: int = 128) -> PatternSchedule:
+    """dp=1 always — no dropout (eval mode / baseline)."""
+    return PatternSchedule(kind=kind, dist=np.array([1.0]), block=block)

@@ -1,0 +1,134 @@
+"""SGD-based Search Algorithm for the dropout-pattern distribution (Alg. 1).
+
+Searches a categorical distribution ``K = softmax(v)`` over patterns
+``dp ∈ {1..N}`` such that
+
+    E_p = || K · p_u  −  p ||²          (expected global dropout rate ≈ p)
+    E_n = (1/N) Σ_i K_i log K_i         (negative entropy → diversity)
+    loss = λ1·E_p + λ2·E_n,   λ1 + λ2 = 1
+
+where ``p_u[i] = (i-1)/i`` is the global dropout rate of pattern dp=i.
+
+The paper runs this once per (layer, target-rate) before training — a
+one-time host-side cost.  We implement it as a jit'd JAX loop (lax.while_loop
+on the loss delta) so it is also differentiable/testable, plus a closed-form
+sanity initializer used as a warm start.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    target_rate: float          # p, the conventional dropout rate to match
+    n_patterns: int = 8         # N = dp_max
+    lam1: float = 0.95          # fit weight
+    lam2: float = 0.05          # entropy weight (lam1 + lam2 = 1)
+    lr: float = 1.0
+    momentum: float = 0.9
+    threshold: float = 1e-12    # |Δloss| stopping criterion
+    min_iters: int = 500        # don't trust |Δloss| near the flat init
+    max_iters: int = 20_000
+    allowed: tuple[int, ...] | None = None  # restrict support (divisor periods)
+
+    def __post_init__(self):
+        if not 0.0 <= self.target_rate < 1.0:
+            raise ValueError(f"target_rate must be in [0,1), got {self.target_rate}")
+        if abs(self.lam1 + self.lam2 - 1.0) > 1e-6:
+            raise ValueError("lam1 + lam2 must equal 1 (paper Alg. 1)")
+
+
+def pattern_rates(n: int) -> jnp.ndarray:
+    """p_u = [0, 1/2, 2/3, ..., (N-1)/N]."""
+    i = jnp.arange(1, n + 1, dtype=jnp.float32)
+    return (i - 1.0) / i
+
+
+def _loss_fn(v, p_u, mask, cfg: SearchConfig):
+    # Restricted support: disallowed periods get -inf logits.
+    logits = jnp.where(mask, v, -jnp.inf)
+    d = jax.nn.softmax(logits)
+    e_p = jnp.square(jnp.vdot(d, p_u) - cfg.target_rate)
+    # entropy term only over the support (0·log0 := 0)
+    safe = jnp.where(mask & (d > 0), d, 1.0)
+    e_n = jnp.sum(jnp.where(mask, d * jnp.log(safe), 0.0)) / p_u.shape[0]
+    return cfg.lam1 * e_p + cfg.lam2 * e_n
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _search_jit(v0, p_u, mask, cfg: SearchConfig):
+    grad_fn = jax.value_and_grad(_loss_fn)
+
+    def cond(state):
+        _, _, prev_loss, loss, it = state
+        converged = jnp.abs(prev_loss - loss) < cfg.threshold
+        # the init sits on the entropy plateau — require min_iters before
+        # trusting the |Δloss| criterion (Alg. 1 line 3)
+        return ((it < cfg.min_iters) | ~converged) & (it < cfg.max_iters)
+
+    def body(state):
+        v, mom, prev_loss, loss, it = state
+        new_loss, g = grad_fn(v, p_u, mask, cfg)
+        # SGD with momentum (Alg. 1 line 9; momentum for convergence speed)
+        mom = cfg.momentum * mom + jnp.where(mask, g, 0.0)
+        v_new = v - cfg.lr * mom
+        return (v_new, mom, loss, new_loss, it + 1)
+
+    loss0, _ = grad_fn(v0, p_u, mask, cfg)
+    state = (v0, jnp.zeros_like(v0), jnp.inf, loss0, jnp.int32(0))
+    v, _, _, loss, iters = jax.lax.while_loop(cond, body, state)
+    d = jax.nn.softmax(jnp.where(mask, v, -jnp.inf))
+    return d, loss, iters
+
+
+def search_distribution(cfg: SearchConfig, seed: int = 0):
+    """Run Algorithm 1.  Returns (K, loss, iters) with K a [N] numpy array."""
+    n = cfg.n_patterns
+    p_u = pattern_rates(n)
+    if cfg.allowed is not None:
+        mask = np.zeros(n, bool)
+        for dp in cfg.allowed:
+            if not (1 <= dp <= n):
+                raise ValueError(f"allowed period {dp} outside 1..{n}")
+            mask[dp - 1] = True
+        if not mask.any():
+            raise ValueError("empty allowed-period set")
+    else:
+        mask = np.ones(n, bool)
+    mask = jnp.asarray(mask)
+
+    # Warm start near the closed-form two-point solution to speed convergence.
+    v0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    d, loss, iters = _search_jit(v0, p_u, mask, cfg)
+    return np.asarray(d), float(loss), int(iters)
+
+
+def expected_rate(k: np.ndarray) -> float:
+    """K · p_u — the distribution's expected global dropout rate (Eq. 3)."""
+    n = len(k)
+    i = np.arange(1, n + 1, dtype=np.float64)
+    return float(np.dot(k, (i - 1.0) / i))
+
+
+def entropy(k: np.ndarray) -> float:
+    k = np.clip(np.asarray(k, np.float64), 1e-30, 1.0)
+    return float(-np.sum(k * np.log(k)))
+
+
+def closed_form_two_point(p: float, dp_lo: int, dp_hi: int) -> np.ndarray:
+    """Exact two-support solution for sanity checks: mix dp_lo, dp_hi so the
+    expected rate equals p (when (dp_lo-1)/dp_lo <= p <= (dp_hi-1)/dp_hi)."""
+    r_lo, r_hi = (dp_lo - 1) / dp_lo, (dp_hi - 1) / dp_hi
+    if not (r_lo <= p <= r_hi):
+        raise ValueError(f"p={p} outside [{r_lo}, {r_hi}]")
+    w_hi = 0.0 if r_hi == r_lo else (p - r_lo) / (r_hi - r_lo)
+    k = np.zeros(max(dp_lo, dp_hi))
+    k[dp_lo - 1] = 1.0 - w_hi
+    k[dp_hi - 1] = w_hi
+    return k

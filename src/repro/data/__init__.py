@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipelines."""
+from .pipeline import SyntheticLMData, synthetic_mnist, synthetic_ptb
+__all__ = ["SyntheticLMData", "synthetic_mnist", "synthetic_ptb"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for compact RDP/TDP matmuls (interpret-mode on CPU).
+
+These are the compute hot-spots the paper optimizes: the dropout-patterned
+matmuls (paper Fig. 3).  rdp_matmul.py / tdp_matmul.py hold the pallas_call
+kernels, ops.py the jit'd wrappers, ref.py the pure-jnp oracles.
+"""
+from . import ops, ref
+from .rdp_matmul import rdp_matmul_cols, rdp_matmul_rows
+from .tdp_matmul import tdp_matmul
+
+__all__ = ["ops", "ref", "rdp_matmul_cols", "rdp_matmul_rows", "tdp_matmul"]

@@ -1,0 +1,101 @@
+"""Public jit'd wrappers over the Pallas RDP/TDP kernels.
+
+On CPU (this container) the kernels run ``interpret=True``; on TPU they
+compile to Mosaic.  ``use_pallas=False`` falls back to the XLA gather path
+(repro.core.dropout) — same numerics contract, used by pjit'd training where
+the gather fuses into the matmul anyway.  Auto-detection: Pallas path on TPU
+backends, XLA path elsewhere, overridable per call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import patterns as P
+from . import ref
+from .rdp_matmul import rdp_matmul_cols, rdp_matmul_rows
+from .tdp_matmul import tdp_matmul
+
+
+@functools.cache
+def _default_backend_is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _default_backend_is_tpu()
+
+
+def rdp_up(a, w, bias, *, dp: int, block: int = 128, scale: bool = True,
+           use_pallas: bool | None = None):
+    """Compact up-projection: [., K] @ [K, N] -> [., N/dp] (×dp if scale)."""
+    if dp == 1:
+        return a @ w
+    if use_pallas is None:
+        use_pallas = True
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    if use_pallas:
+        out = rdp_matmul_cols(a2, w, bias, dp=dp, block=block, scale=scale,
+                              interpret=_interpret())
+    else:
+        out = ref.rdp_matmul_cols_ref(a2, w, dp, bias, block=block,
+                                      scale=scale)
+    return out.reshape(*lead, -1)
+
+
+def rdp_down(a_compact, w, bias, *, dp: int, block: int = 128,
+             use_pallas: bool | None = None):
+    """Compact down-projection: [., K/dp] @ [K, N] -> [., N]."""
+    if dp == 1:
+        return a_compact @ w
+    if use_pallas is None:
+        use_pallas = True
+    lead = a_compact.shape[:-1]
+    a2 = a_compact.reshape(-1, a_compact.shape[-1])
+    if use_pallas:
+        out = rdp_matmul_rows(a2, w, bias, dp=dp, block=block,
+                              interpret=_interpret())
+    else:
+        out = ref.rdp_matmul_rows_ref(a2, w, dp, bias, block=block)
+    return out.reshape(*lead, -1)
+
+
+def tdp_mm(a, w, bias, *, dp: int, tile: int = 128,
+           use_pallas: bool | None = None):
+    """TDP masked matmul: [., K] @ [K, N] -> [., N], ×dp scale."""
+    if dp == 1:
+        return a @ w
+    if use_pallas is None:
+        use_pallas = True
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    if use_pallas:
+        out = tdp_matmul(a2, w, bias, dp=dp, tile=tile, interpret=_interpret())
+    else:
+        out = ref.tdp_matmul_ref(a2, w, dp, bias, tile=tile)
+    return out.reshape(*lead, -1)
+
+
+def rdp_ffn(x, w_up, w_down, bias, *, dp: int, act=jax.nn.relu,
+            w_gate=None, block: int = 128, use_pallas: bool | None = None):
+    """Full compact FFN under RDP using the kernels end-to-end.
+
+    h = act(x @ Wup[:,kept]) [* (x @ Wgate[:,kept])] ×dp;  y = h @ Wdown[kept,:]
+
+    The inverted-dropout ×dp is applied AFTER the activation (matching the
+    mask-multiply oracle exactly — act is not homogeneous in general).
+    """
+    h = rdp_up(x, w_up, bias, dp=dp, block=block, scale=False,
+               use_pallas=use_pallas)
+    if w_gate is None:
+        h = act(h)
+    else:
+        g = rdp_up(x, w_gate, bias, dp=dp, block=block, scale=False,
+                   use_pallas=use_pallas)
+        h = act(h) * g
+    if dp > 1:
+        h = h * dp
+    return rdp_down(h, w_down, bias, dp=dp, block=block, use_pallas=use_pallas)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (mask-multiply semantics).
+
+These define the *numerics contract*: each kernel must match its oracle to
+fp tolerance across shapes/dtypes (tests/test_kernels.py sweeps them).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import patterns as P
+
+
+def rdp_matmul_cols_ref(a, w, dp, b, *, block: int = 128, scale: bool = True):
+    """C = a @ w[:, kept_col_blocks] (compact output, [M, N/dp]).
+
+    Kept column-blocks of ``w`` are (b + j*dp) % (N/block) for j in
+    [0, N/(block*dp)); the output is the *compact* activation (the caller
+    scatters if it ever needs the full layout — the framework never does).
+    """
+    idx = P.kept_unit_indices(w.shape[-1], dp, b, block)
+    c = a @ jnp.take(w, idx, axis=-1)
+    if scale and dp > 1:
+        c = c * dp
+    return c.astype(a.dtype)
+
+
+def rdp_matmul_rows_ref(a_compact, w, dp, b, *, block: int = 128,
+                        scale: bool = False):
+    """C = a_compact @ w[kept_row_blocks, :]  ([M, K/dp] @ [K/dp, N]).
+
+    The down-projection: ``a_compact`` holds only kept-neuron activations;
+    the kernel contracts them against the matching kept rows of ``w``
+    without materializing the gathered weight.  (Inverted-dropout scale is
+    normally folded in the *up* projection, so default scale=False.)
+    """
+    idx = P.kept_unit_indices(w.shape[0], dp, b, block)
+    c = a_compact @ jnp.take(w, idx, axis=0)
+    if scale and dp > 1:
+        c = c * dp
+    return c.astype(a_compact.dtype)
+
+
+def tdp_matmul_ref(a, w, dp, b, *, tile: int = 128, scale: bool = True):
+    """C = a @ (w ∘ diagonal-TDP-mask) * dp   ([M, K] @ [K, N] → [M, N])."""
+    mask = P.tdp_mask(w.shape[0], w.shape[1], dp, b, tile, w.dtype)
+    c = a @ (w * mask)
+    if scale and dp > 1:
+        c = c * dp
+    return c.astype(a.dtype)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel for Tile-based Dropout Pattern (TDP) matmul.
+
+``C[M, N] = (A @ (W ∘ diag-TDP-mask)) · dp`` where the mask keeps weight tile
+(i, j) iff ``(i + j - b) % dp == 0`` (diagonal period — DESIGN.md §2).  For
+output tile-column ``j`` the kept contraction tiles are
+``i = (b - j) mod dp + s·dp``, exactly ``tr/dp`` of them — so the grid's
+contraction dimension is only ``tr/dp`` long: dropped tiles are neither
+DMA'd nor multiplied.  This is the paper's Fig. 3(b) on the MXU: the compact
+weight/input tiles are the only resident data in VMEM.
+
+Tile edge is pinned to 128 (MXU dim); A row-block ``bm`` is free.
+Bias ``b`` is scalar-prefetched: one executable per dp, none per bias.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+TILE = 128
+
+
+@functools.partial(jax.jit, static_argnames=("dp", "tile", "bm", "scale",
+                                              "interpret"))
+def tdp_matmul(a: jax.Array, w: jax.Array, b: jax.Array, *, dp: int,
+               tile: int = TILE, bm: int = 128, scale: bool = True,
+               interpret: bool = False) -> jax.Array:
+    """a: [M, K], w: [K, N], b: int32 scalar.  Requires dp | (K/tile)."""
+    m, kdim = a.shape
+    k2, n = w.shape
+    assert kdim == k2, (a.shape, w.shape)
+    tr, tc = kdim // tile, n // tile
+    assert kdim % tile == 0 and n % tile == 0, (kdim, n, tile)
+    assert tr % dp == 0, (tr, dp)
+    from .rdp_matmul import _fit_block
+    bm = _fit_block(m, bm)
+    assert m % bm == 0, (m, bm)
+    kept = tr // dp
+    out_scale = float(dp) if (scale and dp > 1) else 1.0
+
+    def kernel(b_ref, a_ref, w_ref, o_ref, acc_ref):
+        s = pl.program_id(2)
+
+        @pl.when(s == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jnp.dot(a_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(s == pl.num_programs(2) - 1)
+        def _fin():
+            o_ref[...] = (acc_ref[...] * out_scale).astype(o_ref.dtype)
+
+    def row_tile(j, s, bias):
+        # kept contraction tile for output column j, slot s
+        return (bias[0] - j) % dp + s * dp
+
+    grid = (m // bm, tc, kept)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, tile),
+                             lambda i, j, s, bias: (i, row_tile(j, s, bias))),
+                pl.BlockSpec((tile, tile),
+                             lambda i, j, s, bias: (row_tile(j, s, bias), j)),
+            ],
+            out_specs=pl.BlockSpec((bm, tile), lambda i, j, s, bias: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bm, tile), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(jnp.asarray(b, jnp.int32).reshape(1), a, w)

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. builds abstract params/optimizer/batch (ShapeDtypeStruct — no
+     allocation) with their NamedShardings from the arch's profile,
+  3. jit-lowers and COMPILES the train / prefill / decode step,
+  4. records memory_analysis(), cost_analysis(), and the trip-count-
+     corrected HLO roofline terms (hlo_analysis.py) to a JSON cell file.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod
+  ... --out experiments/dryrun/   (one JSON per cell)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_supported, get_spec,
+                           input_specs, normalize)
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models import init_lm
+from repro.models.layers import NO_PATTERN, PatternArgs
+from repro.optim.optimizers import AdamW
+from repro.parallel.sharding import (PROFILES, logical_sharding,
+                                     param_shardings, set_mesh_and_rules,
+                                     zero1_opt_sharding)
+from repro.serve import engine as serve
+from repro.train.train_step import make_train_step
+
+
+def _batch_axes(cfg, kind: str):
+    if cfg.n_codebooks:
+        tok = ("batch", None, "seq") if kind != "decode" else ("batch", None, None)
+    else:
+        tok = ("batch", "seq") if kind != "decode" else ("batch", None)
+    ax = {"tokens": tok}
+    if kind == "train":
+        ax["labels"] = tok
+    if cfg.vision_tokens and kind != "decode":
+        ax["vision_embeds"] = ("batch", None, None)
+    return ax
+
+
+def _shardings_for(tree_sds, tree_axes, mesh, rules):
+    return jax.tree.map(
+        lambda s, ax: logical_sharding(s.shape, ax, mesh, rules,
+                                       is_param=False),
+        tree_sds, tree_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _bytes_per_device(tree_sds, tree_sh):
+    total = 0
+    for s, sh in zip(jax.tree.leaves(tree_sds), jax.tree.leaves(tree_sh)):
+        n = s.dtype.itemsize
+        for d in s.shape:
+            n *= d
+        total += n // sh.num_devices * _replication(sh, s.shape)
+    return total
+
+
+def _replication(sh, shape) -> int:
+    # devices / (product of mesh axes actually used) = replication factor
+    used = 1
+    spec = sh.spec
+    for i, p in enumerate(spec):
+        if p is None:
+            continue
+        axes = (p,) if isinstance(p, str) else p
+        for a in axes:
+            used *= sh.mesh.shape[a]
+    return sh.num_devices // used
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             dp: int = 1, mla_absorb: bool | None = None,
+             tag: str = "", profile: str | None = None,
+             microbatches: int | None = None,
+             moe_impl: str | None = None) -> dict:
+    spec = get_spec(arch)
+    cfg = spec.config
+    if mla_absorb is not None:
+        cfg = dataclasses.replace(cfg, mla_absorb=mla_absorb)
+    if moe_impl is not None:
+        cfg = dataclasses.replace(cfg, moe_impl=moe_impl)
+    import os as _os
+    if _os.environ.get("DRYRUN_REMAT_POLICY"):
+        cfg = dataclasses.replace(
+            cfg, remat_policy=_os.environ["DRYRUN_REMAT_POLICY"])
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(arch, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + (f"__{tag}" if tag else "")
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "kind": shape.kind, "dp": dp, "tag": tag,
+              "supported": ok, "skip_reason": reason}
+    if not ok:
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    if profile is None:
+        profile = spec.profile if shape.kind == "train" else spec.serve_profile
+    result["profile"] = profile
+    rules = PROFILES[profile]
+    pat = (PatternArgs(dp=dp, bias=0, kind=cfg.pattern_kind,
+                       nb=cfg.pattern_nb) if dp > 1 else NO_PATTERN)
+
+    t0 = time.time()
+    with set_mesh_and_rules(mesh, rules):
+        captured = {}
+
+        def _abstract_init():
+            p, a = init_lm(cfg)
+            captured["axes"] = a    # plain-Python strings, captured aside
+            return p
+
+        aparams = jax.eval_shape(_abstract_init)
+        axes = captured["axes"]
+        p_sh = _shardings_for(aparams, axes, mesh, rules)
+        batch_sds = input_specs(cfg, shape)
+        b_sh = _shardings_for(batch_sds, _batch_axes(cfg, shape.kind),
+                              mesh, rules)
+
+        if shape.kind == "train":
+            dp_axes = mesh.shape["data"] * mesh.shape.get("pod", 1)
+            micro = min(microbatches or spec.microbatches,
+                        max(1, shape.global_batch // dp_axes))
+            opt = AdamW(state_dtype="bfloat16"
+                        if arch == "deepseek_v3_671b" else "float32")
+            aopt = jax.eval_shape(opt.init, aparams)
+            o_sh = jax.tree.map(
+                lambda s, psh: (zero1_opt_sharding(psh, s.shape)
+                                if s.ndim else psh),
+                aopt, jax.tree.map(lambda s, p: p, aopt, _opt_like(p_sh)))
+            step = make_train_step(cfg, opt, microbatches=micro, pat=pat,
+                                   acc_shardings=o_sh["mu"])
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh, None),
+                         donate_argnums=(0, 1))
+            args = (aparams, aopt, batch_sds,
+                    jax.ShapeDtypeStruct((), jnp.float32))
+            result["microbatches"] = micro
+        elif shape.kind == "prefill":
+            def pre(params, batch):
+                return serve.prefill(cfg, params, batch["tokens"],
+                                     shape.seq_len,
+                                     batch.get("vision_embeds"))
+            fn = jax.jit(pre, in_shardings=(p_sh, b_sh))
+            args = (aparams, batch_sds)
+        else:  # decode
+            acache, cax = serve.init_cache(cfg, shape.global_batch,
+                                           shape.seq_len, abstract=True)
+            c_sh = {"layers": [
+                jax.tree.map(lambda s, ax2: logical_sharding(
+                    s.shape, ax2, mesh, rules, is_param=False),
+                    cl, ax,
+                    is_leaf=lambda x: isinstance(x, tuple) and all(
+                        isinstance(e, (str, type(None))) for e in x))
+                for cl, ax in zip(acache["layers"], cax["layers"])],
+                "pos": logical_sharding((), (), mesh, rules, False)}
+
+            def dec(params, cache, batch):
+                return serve.decode_step(cfg, params, cache, batch["tokens"])
+            fn = jax.jit(dec, in_shardings=(p_sh, c_sh, b_sh),
+                         donate_argnums=(1,))
+            args = (aparams, acache, batch_sds)
+            result["cache_bytes_per_device"] = _bytes_per_device(
+                jax.tree.leaves(acache), jax.tree.leaves(c_sh))
+
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    ana = analyze_hlo(hlo, default_group=n_chips)
+    # decode reads the cache once per step; trainers re-read weights — add
+    # per-device argument bytes as the resident-read proxy for the memory
+    # term (documented in EXPERIMENTS.md §Roofline).
+    arg_bytes = getattr(mem, "argument_size_in_bytes", 0)
+    terms = roofline_terms(ana, n_chips=n_chips, extra_bytes=arg_bytes)
+
+    result.update({
+        "params_bytes_per_device": _bytes_per_device(
+            jax.tree.leaves(aparams), jax.tree.leaves(p_sh)),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": arg_bytes,
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "cost_analysis_raw": {k: float(v) for k, v in (cost or {}).items()
+                              if isinstance(v, (int, float))},
+        "hlo_analysis": {k: (v if not isinstance(v, dict) else
+                             {kk: float(vv) for kk, vv in v.items()})
+                         for k, v in ana.items() if k != "entry"},
+        "roofline": terms,
+        "n_chips": n_chips,
+    })
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{cell_id}.json").write_text(json.dumps(result, indent=1))
+    import os
+    if os.environ.get("DRYRUN_DUMP_HLO"):
+        (out_dir / f"{cell_id}.hlo.txt").write_text(hlo)
+    return result
+
+
+def _opt_like(p_sh):
+    return {"mu": p_sh, "nu": p_sh,
+            "count": jax.sharding.NamedSharding(
+                jax.tree.leaves(p_sh)[0].mesh,
+                jax.sharding.PartitionSpec())}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="dropout pattern period (train cells)")
+    ap.add_argument("--mla-absorb", type=int, default=-1)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--profile", default=None,
+                    help="override the arch's parallelism profile")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--moe-impl", default=None,
+                    choices=["scatter", "ep_shardmap"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [normalize(args.arch)]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    out = Path(args.out)
+    failures = []
+    for a in archs:
+        for s in shapes:
+            try:
+                t0 = time.time()
+                r = run_cell(a, s, args.multi_pod, out, dp=args.dp,
+                             mla_absorb=(None if args.mla_absorb < 0
+                                         else bool(args.mla_absorb)),
+                             tag=args.tag, profile=args.profile,
+                             microbatches=args.microbatches,
+                             moe_impl=args.moe_impl)
+                if not r["supported"]:
+                    print(f"[skip] {a} × {s}: {r['skip_reason']}")
+                    continue
+                rt = r["roofline"]
+                print(f"[ok] {a} × {s} ({r['mesh']}) "
+                      f"compile={r['compile_s']}s "
+                      f"compute={rt['t_compute_s']:.3e}s "
+                      f"mem={rt['t_memory_s']:.3e}s "
+                      f"coll={rt['t_collective_s']:.3e}s "
+                      f"bottleneck={rt['bottleneck']} "
+                      f"wall={time.time()-t0:.0f}s", flush=True)
+            except Exception as e:
+                failures.append((a, s, repr(e)))
+                print(f"[FAIL] {a} × {s}: {e}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         + ", ".join(f"{a}×{s}" for a, s, _ in failures))
+
+
+if __name__ == "__main__":
+    main()

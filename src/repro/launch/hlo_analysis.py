@@ -1,0 +1,309 @@
+"""Roofline-term extraction from compiled HLO text.
+
+``compiled.cost_analysis()`` counts `while` (scan) bodies ONCE, so a
+61-layer scanned model looks 61× too cheap.  This analyzer re-derives the
+terms from the optimized HLO *with trip-count correction*:
+
+  1. split the module into computations,
+  2. build a per-computation symbol table (instruction name -> shape) —
+     the CPU/TPU optimized dump prints operands as bare names
+     (``dot(%a, %b)``), so operand shapes must be resolved by lookup,
+  3. per computation, accumulate
+       - dot FLOPs (2 · prod(result_dims) · contracted_size),
+       - dot HBM-byte proxy (lhs + rhs + out buffer bytes),
+       - collective wire bytes (all-gather / all-reduce / reduce-scatter /
+         all-to-all / collective-permute) with ring-transfer factors,
+  4. build the call graph (while bodies/conds, fusion/call/conditional
+     ``calls=``/``to_apply=``/``condition=``/``body=``), extract each
+     while's trip count from the max integer constant in its condition,
+  5. fold bottom-up: cost(comp) = own + Σ child_cost · trip.
+
+All byte counts are PER DEVICE (the HLO is the partitioned module).
+Known approximations (documented in EXPERIMENTS.md §Roofline):
+  * non-dot elementwise traffic is excluded from the memory proxy — matmul
+    operands dominate transformer steps; argument bytes are added by the
+    caller as the weight-resident term;
+  * all-reduce wire bytes = 2·N·(n-1)/n (ring), all-gather/reduce-scatter
+    = N·(n-1)/n (N = full-tensor bytes), all-to-all = N·(n-1)/n,
+    collective-permute = N;
+  * trip counts unparseable from a condition default to 1 (warned).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one instruction definition: [ROOT] %name = <shape> <opcode>(<operands>)...
+# (lines are comment-stripped first, so tuple shapes contain no parens)
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"          # name
+    r"((?:\([^()]*\))|\S+)\s+"                    # shape (tuple or single)
+    r"([\w\-]+)\(")                               # opcode
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_NAME = re.compile(r"%?([\w.\-]+)")
+_CALLSITE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_WHILE_ATTRS = re.compile(r"condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_INT = re.compile(r"\bconstant\((\d+)\)")
+_REPLICA_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_RG_DIM = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_dims(tok: str):
+    """'bf16[128,512]{1,0}' -> ('bf16', [128, 512]); None if not a shape."""
+    m = _SHAPE_TOKEN.match(tok.strip().lstrip("("))
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) shape string."""
+    total = 0
+    for dt, dims in (_shape_dims(s.group(0)) or (None, None)
+                     for s in _SHAPE_TOKEN.finditer(shape_str)):
+        if dt is None:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(shape_str: str):
+    m = _SHAPE_TOKEN.search(shape_str)
+    return _shape_dims(m.group(0)) if m else None
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    children: list = dataclasses.field(default_factory=list)  # (name, trips)
+    max_const: int = 0         # for trip-count extraction when used as cond
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> list of instruction lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "=" not in stripped.split("(")[0]:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and stripped:
+            comps[cur].append(stripped)
+    return comps
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _RG_DIM.search(line)
+    if m:
+        return int(m.group(2))
+    m = _REPLICA_GROUPS.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _operand_names(line: str, opcode: str) -> list[str]:
+    """Names inside the top-level parens of ``opcode(...)``."""
+    i = line.find(opcode + "(")
+    if i < 0:
+        return []
+    j = i + len(opcode) + 1
+    depth, buf = 1, []
+    while j < len(line) and depth:
+        c = line[j]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf.append(c)
+        j += 1
+    inner = "".join(buf)
+    names = []
+    for part in inner.split(","):
+        part = part.strip()
+        m = _OPERAND_NAME.match(part.lstrip("%"))
+        if m:
+            names.append(m.group(1))
+    return names
+
+
+def _analyze_computation(lines: list[str], default_group: int) -> CompCost:
+    c = CompCost()
+    symtab: dict[str, str] = {}
+    parsed = []
+    for line in lines:
+        line = _COMMENT_RE.sub("", line)
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode = m.group(1), m.group(2), m.group(3)
+        symtab[name] = shape
+        parsed.append((name, shape, opcode, line))
+        for cm in _CONST_INT.finditer(line):
+            c.max_const = max(c.max_const, int(cm.group(1)))
+
+    for name, shape, opcode, line in parsed:
+        if opcode == "dot":
+            out = _first_shape(shape)
+            mc = _CONTRACT.search(line)
+            ops = _operand_names(line, "dot")
+            if out and mc and ops:
+                lhs_shape = _first_shape(symtab.get(ops[0], ""))
+                if lhs_shape:
+                    cdims = [int(d) for d in mc.group(1).split(",") if d]
+                    csize = 1
+                    for d in cdims:
+                        if d < len(lhs_shape[1]):
+                            csize *= lhs_shape[1][d]
+                    out_n = 1
+                    for d in out[1]:
+                        out_n *= d
+                    c.dot_flops += 2.0 * out_n * csize
+                    byts = _shape_bytes(shape)
+                    for o in ops[:2]:
+                        byts += _shape_bytes(symtab.get(o, ""))
+                    c.dot_bytes += byts
+        elif any(opcode == k or opcode == k + "-start" for k in _COLLECTIVES):
+            kind = opcode.removesuffix("-start")
+            # full-tensor bytes N: use the LARGER of operand/result totals
+            # (all-gather result = N; reduce-scatter operand = N)
+            op_names = _operand_names(line, opcode)
+            op_bytes = sum(_shape_bytes(symtab.get(o, "")) for o in op_names)
+            res_bytes = _shape_bytes(shape)
+            n_full = max(op_bytes, res_bytes)
+            n = _group_size(line, default_group)
+            if n > 1:
+                ring = (n - 1) / n
+                factor = {"all-gather": ring, "reduce-scatter": ring,
+                          "all-reduce": 2 * ring, "all-to-all": ring,
+                          "collective-permute": 1.0}[kind]
+                wire = n_full * factor
+                c.coll_bytes += wire
+                c.coll_by_kind[kind] += wire
+        elif opcode == "while":
+            m2 = _WHILE_ATTRS.search(line)
+            if m2:
+                mt = _TRIP_COUNT_RE.search(line)
+                trips = int(mt.group(1)) if mt else None
+                c.children.append(
+                    ("__while__", m2.group(1), (m2.group(2), trips)))
+                continue
+        for callee in _CALLSITE.findall(line):
+            c.children.append(("__call__", callee, None))
+    return c
+
+
+def analyze_hlo(hlo: str, default_group: int = 1) -> dict:
+    comps = split_computations(hlo)
+    costs = {name: _analyze_computation(lines, default_group)
+             for name, lines in comps.items()}
+    warn_trips = []
+
+    # resolve children into (name, trips)
+    resolved: dict[str, list] = {}
+    for name, c in costs.items():
+        ch = []
+        for tag, a, b in c.children:
+            if tag == "__while__":
+                cond, (body, trips) = a, b
+                if trips is None:  # no backend_config: fall back to cond const
+                    trips = costs[cond].max_const if cond in costs else 0
+                if trips <= 0:
+                    trips = 1
+                    warn_trips.append(name)
+                ch.append((body, trips))
+                ch.append((cond, trips + 1))
+            else:
+                if a in costs:
+                    ch.append((a, 1))
+        resolved[name] = ch
+
+    referenced = {child for ch in resolved.values() for child, _ in ch}
+    entry = None
+    for name in costs:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None:
+        cands = [n for n in costs if n not in referenced]
+        entry = cands[0] if cands else next(iter(costs))
+
+    memo: dict[str, tuple] = {}
+
+    def fold(name, stack=()):
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in costs:
+            return (0.0, 0.0, 0.0, {})
+        c = costs[name]
+        f, b, cb = c.dot_flops, c.dot_bytes, c.coll_bytes
+        by_kind = dict(c.coll_by_kind)
+        for child, trips in resolved[name]:
+            cf, cby, ccb, ck = fold(child, stack + (name,))
+            f += cf * trips
+            b += cby * trips
+            cb += ccb * trips
+            for k, v in ck.items():
+                by_kind[k] = by_kind.get(k, 0.0) + v * trips
+        memo[name] = (f, b, cb, by_kind)
+        return memo[name]
+
+    flops, byts, coll, by_kind = fold(entry)
+    return {
+        "dot_flops": flops,
+        "dot_bytes": byts,
+        "collective_bytes": coll,
+        "collective_by_kind": by_kind,
+        "n_computations": len(comps),
+        "unparsed_trip_counts": warn_trips[:20],
+        "entry": entry,
+    }
+
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+def roofline_terms(analysis: dict, *, n_chips: int,
+                   extra_bytes: float = 0.0) -> dict:
+    """Three roofline terms in seconds (per-device HLO → per-chip terms)."""
+    t_compute = analysis["dot_flops"] / PEAK_FLOPS_BF16
+    t_memory = (analysis["dot_bytes"] + extra_bytes) / HBM_BW
+    t_coll = analysis["collective_bytes"] / ICI_BW
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "bottleneck": dom[0],
+            "t_bound_s": dom[1]}

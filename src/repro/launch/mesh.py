@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod.
+
+    Axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+    'pod' is pure data-parallel across the pod boundary.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1×N (data, model) mesh — lets the same
+    pjit code paths run on 1 CPU device in tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,7 @@
+"""Model zoo: unified transformer (dense/moe/mla/ssm/hybrid) + paper models."""
+from . import layers, transformer
+from .transformer import ModelConfig, init_lm, forward, lm_loss
+from .layers import PatternArgs, NO_PATTERN, materialize
+
+__all__ = ["layers", "transformer", "ModelConfig", "init_lm", "forward",
+           "lm_loss", "PatternArgs", "NO_PATTERN", "materialize"]

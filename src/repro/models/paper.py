@@ -1,0 +1,171 @@
+"""The paper's own benchmark models: 4-layer MLP (MNIST) and 2-layer LSTM LM.
+
+Three dropout modes per model, matching the paper's experiment matrix:
+  * "bernoulli" — conventional random dropout (mask-multiply, Fig. 1a): the
+    baseline whose accuracy we must match and whose time we must beat.
+  * "rdp" / "tdp" — Approximate Random Dropout: the matmuls shrink to the
+    kept 1/dp (neuron-granular here, exactly the paper's §III-A semantics).
+
+The compact path uses gather/slice (XLA fuses it into the matmul); the
+Pallas kernels are exercised by tests/benchmarks separately.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import patterns as P
+from repro.core.dropout import bernoulli_dropout
+from .layers import init_lstm_cell, lstm_layer
+
+
+# --------------------------------------------------------------------------
+# MLP (paper §IV-A/B)
+# --------------------------------------------------------------------------
+
+def init_mlp(key, sizes: Sequence[int] = (784, 2048, 2048, 10)):
+    params = []
+    keys = jax.random.split(key, len(sizes) - 1)
+    for k, din, dout in zip(keys, sizes[:-1], sizes[1:]):
+        params.append({"w": jax.random.normal(k, (din, dout)) *
+                            jnp.sqrt(2.0 / din),
+                       "b": jnp.zeros((dout,))})
+    return params
+
+
+@functools.partial(jax.jit, static_argnames=("dps", "block"))
+def mlp_apply_rdp(params, x, dps: tuple, biases, block: int = 1):
+    """Compact forward: dps/biases give (dp, b) per hidden layer.
+
+    Hidden layer i's pattern compacts layer i's output columns AND layer
+    i+1's input rows — the matmul chain shrinks end-to-end (Fig. 3a).
+    """
+    h = x
+    prev_idx = None
+    for i, lp in enumerate(params):
+        w, b = lp["w"], lp["b"]
+        if prev_idx is not None:
+            w = jnp.take(w, prev_idx, axis=0)
+        if i < len(dps):                       # hidden layer with dropout
+            dp = dps[i]
+            idx = P.kept_unit_indices(lp["w"].shape[1], dp, biases[i], block)
+            w = jnp.take(w, idx, axis=1)
+            h = jax.nn.relu(h @ w + jnp.take(b, idx)) * dp
+            prev_idx = idx
+        else:                                  # output layer
+            h = h @ w + b
+            prev_idx = None
+    return h
+
+
+@functools.partial(jax.jit, static_argnames=("dps", "block", "tile"))
+def mlp_apply_tdp(params, x, dps: tuple, biases, block: int = 1,
+                  tile: int = 32):
+    """TDP forward: synapse-tile dropout on each hidden weight matrix
+    (diagonal period — DESIGN.md §2), mask-free only in the kernels; here
+    the XLA path uses the tiled-gather contraction."""
+    from repro.core.dropout import tdp_matmul_apply
+    h = x
+    for i, lp in enumerate(params):
+        if i < len(dps) and dps[i] > 1:
+            y = tdp_matmul_apply(h, lp["w"], dps[i], biases[i], tile=tile)
+            h = jax.nn.relu(y + lp["b"])
+        elif i < len(dps):
+            h = jax.nn.relu(h @ lp["w"] + lp["b"])
+        else:
+            h = h @ lp["w"] + lp["b"]
+    return h
+
+
+@functools.partial(jax.jit, static_argnames=("rates",))
+def mlp_apply_bernoulli(params, x, rng, rates):
+    h = x
+    keys = jax.random.split(rng, len(params))
+    for i, lp in enumerate(params):
+        if i < len(params) - 1:
+            h = jax.nn.relu(h @ lp["w"] + lp["b"])
+            h = bernoulli_dropout(keys[i], h, rates[i])
+        else:
+            h = h @ lp["w"] + lp["b"]
+    return h
+
+
+@jax.jit
+def mlp_apply_eval(params, x):
+    h = x
+    for i, lp in enumerate(params):
+        h = h @ lp["w"] + lp["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# --------------------------------------------------------------------------
+# LSTM LM (paper §IV-C) — 2×1500, dropout between layers
+# --------------------------------------------------------------------------
+
+def init_lstm_lm(key, vocab: int = 8800, d_embed: int = 650, d_hid: int = 1500):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    c1, _ = init_lstm_cell(d_embed, d_hid)
+    c2, _ = init_lstm_cell(d_hid, d_hid)
+
+    def mat(k, shape):
+        return jax.random.normal(k, shape) * jnp.sqrt(1.0 / shape[0])
+
+    return {
+        "embed": jax.random.normal(k1, (vocab, d_embed)) * 0.05,
+        "lstm1": {"wx": mat(k2, c1["wx"].shape), "wh": mat(k2, c1["wh"].shape),
+                  "b": c1["b"]},
+        "lstm2": {"wx": mat(k3, c2["wx"].shape), "wh": mat(k3, c2["wh"].shape),
+                  "b": c2["b"]},
+        "out": {"w": mat(k4, (d_hid, vocab)), "b": jnp.zeros((vocab,))},
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("dps", "block"))
+def lstm_lm_apply_rdp(params, tokens, dps: tuple, biases, block: int = 1):
+    """Compact LSTM forward: dropout between layer1→layer2 and layer2→out.
+
+    Kept activations of layer i feed a row-compacted wx of layer i+1 —
+    inter-layer matmuls shrink by 1/dp (the recurrent wh stays full, as in
+    the paper's Zaremba-style setup where dropout is non-recurrent)."""
+    x = jnp.take(params["embed"], tokens, axis=0)      # [B, T, E]
+    h1 = lstm_layer(params["lstm1"], x)                # [B, T, H]
+    dp1, dp2 = dps
+    d_hid = h1.shape[-1]
+    idx1 = P.kept_unit_indices(d_hid, dp1, biases[0], block)
+    h1c = jnp.take(h1, idx1, axis=-1) * dp1            # [B, T, H/dp1]
+    wx2 = jnp.take(params["lstm2"]["wx"], idx1, axis=0)
+    h2 = lstm_layer({"wx": wx2, "wh": params["lstm2"]["wh"],
+                     "b": params["lstm2"]["b"]}, h1c)
+    idx2 = P.kept_unit_indices(d_hid, dp2, biases[1], block)
+    h2c = jnp.take(h2, idx2, axis=-1) * dp2
+    w_out = jnp.take(params["out"]["w"], idx2, axis=0)
+    return h2c @ w_out + params["out"]["b"]
+
+
+@functools.partial(jax.jit, static_argnames=("rates",))
+def lstm_lm_apply_bernoulli(params, tokens, rng, rates):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    k1, k2 = jax.random.split(rng)
+    h1 = lstm_layer(params["lstm1"], x)
+    h1 = bernoulli_dropout(k1, h1, rates[0])
+    h2 = lstm_layer(params["lstm2"], h1)
+    h2 = bernoulli_dropout(k2, h2, rates[1])
+    return h2 @ params["out"]["w"] + params["out"]["b"]
+
+
+@jax.jit
+def lstm_lm_apply_eval(params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    h1 = lstm_layer(params["lstm1"], x)
+    h2 = lstm_layer(params["lstm2"], h1)
+    return h2 @ params["out"]["w"] + params["out"]["b"]
+
+
+def xent(logits, labels):
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.take_along_axis(logp, labels[..., None], -1).mean()

@@ -1,0 +1,3 @@
+"""Optimizers and schedules."""
+from .optimizers import AdamW, SGDMomentum, cosine_schedule, clip_by_global_norm
+__all__ = ["AdamW", "SGDMomentum", "cosine_schedule", "clip_by_global_norm"]

@@ -1,0 +1,102 @@
+"""Optimizers (pure pytree, ZeRO-1-shardable states) + LR schedules.
+
+State dtype is configurable: fp32 for ≤100B models, bf16 moments for the
+671B tier where fp32 states don't fit 256 chips (DESIGN.md §5 records the
+tradeoff).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"    # "bfloat16" for the largest models
+
+    def init(self, params):
+        dt = jnp.bfloat16 if self.state_dtype == "bfloat16" else jnp.float32
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"mu": jax.tree.map(zeros, params),
+                "nu": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state, lr):
+        c = state["count"] + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+            nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            step = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            p_n = p.astype(jnp.float32) - lr * step
+            return (p_n.astype(p.dtype), mu_n.astype(mu.dtype),
+                    nu_n.astype(nu.dtype))
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mu": new_mu, "nu": new_nu, "count": c}
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDMomentum:
+    momentum: float = 0.9
+
+    def init(self, params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p,
+                                                             jnp.float32),
+                                    params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, params, grads, state, lr):
+        def upd(p, g, m):
+            m_n = self.momentum * m + g.astype(jnp.float32)
+            return (p - lr * m_n).astype(p.dtype), m_n
+
+        out = jax.tree.map(upd, params, grads, state["mom"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"mom": new_m, "count": state["count"] + 1}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), n

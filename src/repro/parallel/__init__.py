@@ -1,0 +1,8 @@
+"""Distribution layer: logical-axis sharding rules, gradient compression."""
+from .sharding import (ShardingRules, constrain, logical_sharding,
+                       param_shardings, PROFILES, set_mesh_and_rules,
+                       current_rules, current_mesh)
+
+__all__ = ["ShardingRules", "constrain", "logical_sharding",
+           "param_shardings", "PROFILES", "set_mesh_and_rules",
+           "current_rules", "current_mesh"]

@@ -1,0 +1,222 @@
+"""Logical-axis sharding: one rules table per parallelism profile.
+
+Every parameter and annotated activation carries a tuple of *logical* axis
+names; a profile maps logical axes → mesh axes.  The same model code then
+runs 1-device (rules resolve to nothing) or 512-way (pod/data/model) with no
+model changes — the MaxText/t5x idiom.
+
+Profiles:
+  tp        — TP over 'model' (ffn/heads/vocab), DP over ('pod','data'),
+              ZeRO-1 opt-state sharding over 'data'.
+  fsdp_tp   — tp + parameters' embed dim sharded over 'data' (ZeRO-3 /
+              FSDP: XLA all-gathers weights per layer, frees them after).
+              For ≥100B dense models (command-r-plus) and deepseek.
+  ep_full   — experts sharded over ('data','model') jointly (EP across the
+              whole pod) — deepseek-v3's 256 experts on 256 chips.
+
+Divisibility guard: a rule is applied to a tensor dim only when the dim is
+divisible by the product of mesh-axis sizes; otherwise that dim silently
+falls back to replication (e.g. gemma3's single KV head never shards).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PSpec
+
+
+Axes = tuple  # tuple[str | None, ...] — logical axes, one per tensor dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-axis → mesh-axis mapping (value: str | tuple[str,...] | None)."""
+    rules: dict
+    # extra mapping applied to *parameters only* (fsdp etc.)
+    param_rules: dict = dataclasses.field(default_factory=dict)
+
+    def lookup(self, name: Optional[str], is_param: bool):
+        if name is None:
+            return None
+        if is_param and name in self.param_rules:
+            return self.param_rules[name]
+        return self.rules.get(name)
+
+
+def _mesh_axes_size(mesh: Mesh, spec) -> int:
+    if spec is None:
+        return 1
+    if isinstance(spec, str):
+        return mesh.shape[spec]
+    return int(np.prod([mesh.shape[a] for a in spec]))
+
+
+def _pspec_for(shape: Sequence[int], axes: Axes, mesh: Mesh,
+               rules: ShardingRules, is_param: bool) -> PSpec:
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} rank != shape {shape}")
+    parts, used = [], set()
+    for dim, name in zip(shape, axes):
+        spec = rules.lookup(name, is_param)
+        if spec is not None:
+            # drop mesh axes absent from this mesh (e.g. 'pod' single-pod)
+            flat = tuple(a for a in
+                         ((spec,) if isinstance(spec, str) else spec)
+                         if a in mesh.axis_names)
+            spec = (None if not flat
+                    else flat[0] if len(flat) == 1 else flat)
+        # drop rule on non-divisible dims or mesh axes already consumed
+        if spec is not None:
+            flat = (spec,) if isinstance(spec, str) else tuple(spec)
+            if any(a in used for a in flat) or dim % _mesh_axes_size(mesh, spec) != 0:
+                spec = None
+            else:
+                used.update(flat)
+        parts.append(spec)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PSpec(*parts)
+
+
+def logical_sharding(shape: Sequence[int], axes: Axes, mesh: Mesh,
+                     rules: ShardingRules, is_param: bool = True
+                     ) -> NamedSharding:
+    return NamedSharding(mesh, _pspec_for(shape, axes, mesh, rules, is_param))
+
+
+def param_shardings(abstract_params, param_axes, mesh: Mesh,
+                    rules: ShardingRules):
+    """Pytree of NamedShardings for a params pytree + its logical-axes twin."""
+    return jax.tree.map(
+        lambda p, ax: logical_sharding(p.shape, ax, mesh, rules, is_param=True),
+        abstract_params, param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# --------------------------------------------------------------------------
+# Ambient mesh+rules context so model code can annotate activations without
+# threading mesh/rules through every call signature.
+# --------------------------------------------------------------------------
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def set_mesh_and_rules(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    prev = getattr(_ctx, "mr", (None, None))
+    _ctx.mr = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.mr = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_ctx, "mr", (None, None))[0]
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_ctx, "mr", (None, None))[1]
+
+
+def constrain(x: jax.Array, axes: Axes) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh/rules (no-op if
+    none is active — single-device tests run the same code)."""
+    mesh, rules = getattr(_ctx, "mr", (None, None))
+    if mesh is None or rules is None:
+        return x
+    s = logical_sharding(x.shape, axes, mesh, rules, is_param=False)
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+# --------------------------------------------------------------------------
+# Profiles
+# --------------------------------------------------------------------------
+
+_BASE_ACT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,                # generic sequence dims (tokens, labels)
+    "res_seq": None,            # residual-stream seq (SP shards it)
+    "q_seq": None,              # attention q seq (attn-seq-parallel)
+    "kv_seq": None,             # attention k/v seq (gathered under SP)
+    "embed": None,
+    "ffn": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "experts": "model",
+    "moe_ffn": None,
+    "state": None,              # ssm state dim
+    "inner": "model",           # ssm expanded channels
+    "cache_seq": None,          # decode KV-cache length dim
+}
+
+PROFILES: dict[str, ShardingRules] = {
+    "tp": ShardingRules(rules=dict(_BASE_ACT_RULES)),
+    # Megatron-style sequence parallelism: the residual stream is
+    # seq-sharded over 'model'; TP regions (ffn/heads) re-shard on entry.
+    # XLA turns the TP all-reduces into reduce-scatter + all-gather pairs
+    # (half the wire bytes) and activation memory drops ~model-fold.
+    "tp_sp": ShardingRules(rules={**_BASE_ACT_RULES, "res_seq": "model"}),
+    # SP + attention-sequence-parallel: q is seq-sharded too (k/v gathered).
+    # For archs whose head count does NOT divide the model axis (e.g.
+    # qwen2.5's 40 heads on 16-way TP) — attention compute shards over the
+    # query sequence instead of being replicated.
+    "tp_sp_attnseq": ShardingRules(rules={**_BASE_ACT_RULES,
+                                          "res_seq": "model",
+                                          "q_seq": "model"}),
+    # FSDP: weights' embed dim sharded over data (all-gathered per layer).
+    "fsdp_tp": ShardingRules(rules=dict(_BASE_ACT_RULES),
+                             param_rules={"embed": "data"}),
+    # FSDP + SP (the ≥100B dense recipe).
+    "fsdp_tp_sp": ShardingRules(rules={**_BASE_ACT_RULES,
+                                       "res_seq": "model"},
+                                param_rules={"embed": "data"}),
+    # Expert parallelism across the full pod: experts over (data, model);
+    # attention/dense params FSDP over data.
+    "ep_full": ShardingRules(rules={**_BASE_ACT_RULES,
+                                    "experts": ("data", "model")},
+                             param_rules={"embed": "data"}),
+    # EP + SP residual stream.
+    "ep_full_sp": ShardingRules(rules={**_BASE_ACT_RULES,
+                                       "experts": ("data", "model"),
+                                       "res_seq": "model"},
+                                param_rules={"embed": "data"}),
+    # Long-context serving: shard the KV-cache/sequence dims over model.
+    "serve_sp": ShardingRules(rules={**_BASE_ACT_RULES,
+                                     "cache_seq": "model",
+                                     "seq": "model",
+                                     "res_seq": "model",
+                                     "q_seq": "model"}),
+    # MoE serving: experts stay sharded, cache sharded.
+    "serve_sp_ep": ShardingRules(rules={**_BASE_ACT_RULES,
+                                        "experts": ("data", "model"),
+                                        "cache_seq": "model",
+                                        "seq": "model",
+                                        "res_seq": "model",
+                                        "q_seq": "model"}),
+}
+
+
+def zero1_opt_sharding(param_sharding: NamedSharding, shape) -> NamedSharding:
+    """ZeRO-1: shard optimizer moments further over 'data' on the first dim
+    that is currently unsharded and divisible — classic optimizer-state
+    partitioning."""
+    mesh = param_sharding.mesh
+    spec = list(param_sharding.spec) + [None] * (len(shape) - len(param_sharding.spec))
+    used = {a for s in spec if s is not None
+            for a in ((s,) if isinstance(s, str) else s)}
+    if "data" not in used:
+        for i, (dim, s) in enumerate(zip(shape, spec)):
+            if s is None and dim % mesh.shape["data"] == 0:
+                spec[i] = "data"
+                break
+    while spec and spec[-1] is None:
+        spec.pop()
+    return NamedSharding(mesh, PSpec(*spec))

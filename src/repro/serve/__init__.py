@@ -1,0 +1,3 @@
+"""Serving: prefill + single-token decode with per-family caches."""
+from .engine import decode_step, prefill, init_cache, decode_groups
+__all__ = ["decode_step", "prefill", "init_cache", "decode_groups"]

@@ -1,0 +1,513 @@
+"""Serving engine: KV/SSM caches, prefill, single-token decode.
+
+Cache layout mirrors the scanned parameter stacks: one cache pytree per
+decode group (see ``decode_groups``), each with a leading group-layer dim so
+the decode step scans layers exactly like training does.
+
+Sub-quadratic honesty: gemma3's local layers keep *ring buffers* of
+``sliding_window`` slots (not max_len), so a 524k-token context costs
+window-sized memory on 22 of 26 layers.  Mamba/hybrid layers keep O(1)
+state.  MLA caches the 512-dim latent + 64-dim rope key (not full K/V) —
+DeepSeek's cache saving — and decodes with *absorbed* matmuls when
+``cfg.mla_absorb``.
+
+Approximate Random Dropout at serving: the paper's technique is a training
+regularizer; serving uses dp=1 (eval mode).  The entry points still accept a
+PatternArgs so policy lives with the caller, e.g. MC-dropout ensembles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import NO_PATTERN, PatternArgs
+from repro.models.transformer import ModelConfig, layer_groups, _ffn_pat
+from repro.parallel.sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# decode grouping (splits gemma3's dense run into local/global sub-runs)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DecodeGroup:
+    kind: str          # dense | moe | ssm | attn_shared
+    start: int         # first layer index (global numbering)
+    count: int
+    stack_idx: int     # which params["stacks"] entry
+    stack_off: int     # offset inside that stack
+    local: bool        # sliding-window layers (ring cache)
+
+
+def decode_groups(cfg: ModelConfig) -> list[DecodeGroup]:
+    groups: list[DecodeGroup] = []
+    layer = 0
+    stack_i = 0
+    for kind, count in layer_groups(cfg):
+        if kind == "attn_shared":
+            groups.append(DecodeGroup(kind, layer, count, -1, 0, False))
+            layer += count
+            continue
+        if (kind in ("dense", "moe") and cfg.sliding_window is not None
+                and cfg.global_every > 0):
+            # subdivide into local/global runs
+            off = 0
+            run_start, run_local = layer, not cfg.is_global_layer(layer)
+            for i in range(layer, layer + count + 1):
+                is_last = i == layer + count
+                loc = (not cfg.is_global_layer(i)) if not is_last else None
+                if is_last or loc != run_local:
+                    groups.append(DecodeGroup(kind, run_start, i - run_start,
+                                              stack_i, run_start - layer,
+                                              run_local))
+                    run_start, run_local = i, loc
+            layer += count
+        else:
+            groups.append(DecodeGroup(kind, layer, count, stack_i, 0, False))
+            layer += count
+        stack_i += 1
+    return [g for g in groups if g.count > 0]
+
+
+def _slice_stack(stack, off: int, count: int):
+    return jax.tree.map(lambda p: jax.lax.slice_in_dim(p, off, off + count), stack)
+
+
+# --------------------------------------------------------------------------
+# cache init
+# --------------------------------------------------------------------------
+
+def _attn_cache(cfg, n, B, C, dt, d2: bool = False):
+    kh = cfg.n_kv_heads
+    hd = (2 * cfg.d_model // cfg.n_heads) if d2 else (
+        cfg.head_dim if not cfg.mla else None)
+    if cfg.mla and not d2:
+        return {"ckv": jnp.zeros((n, B, C, cfg.kv_lora), dt),
+                "krope": jnp.zeros((n, B, C, cfg.qk_rope), dt)}
+    return {"k": jnp.zeros((n, B, C, kh, hd), dt),
+            "v": jnp.zeros((n, B, C, kh, hd), dt)}
+
+
+def _attn_cache_axes(cfg, d2: bool = False):
+    if cfg.mla and not d2:
+        return {"ckv": (None, "batch", "cache_seq", None),
+                "krope": (None, "batch", "cache_seq", None)}
+    return {"k": (None, "batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": (None, "batch", "cache_seq", "kv_heads", "head_dim")}
+
+
+def _ssm_cache(cfg, n, B, dt):
+    di, N = cfg.d_inner, cfg.ssm_state
+    return {"conv": jnp.zeros((n, B, cfg.d_conv - 1, di + 2 * N), dt),
+            "state": jnp.zeros((n, B, cfg.ssm_heads, cfg.ssm_headdim, N),
+                               jnp.float32)}
+
+
+def _ssm_cache_axes(cfg):
+    return {"conv": (None, "batch", None, "inner"),
+            "state": (None, "batch", "inner", None, None)}
+
+
+def init_cache(cfg: ModelConfig, B: int, max_len: int, abstract: bool = False):
+    """Returns (cache, axes): a list (one entry per DecodeGroup) + pos=0."""
+    dt = cfg.jdtype
+    zeros = (lambda *a, **k: jax.eval_shape(lambda: _build(cfg, B, max_len, dt))
+             ) if abstract else None
+    if abstract:
+        return jax.eval_shape(lambda: _build(cfg, B, max_len, dt)), \
+            _build_axes(cfg)
+    return _build(cfg, B, max_len, dt), _build_axes(cfg)
+
+
+def _build(cfg, B, max_len, dt):
+    caches = []
+    for g in decode_groups(cfg):
+        if g.kind == "ssm":
+            caches.append(_ssm_cache(cfg, g.count, B, dt))
+        elif g.kind == "attn_shared":
+            caches.append(_attn_cache(cfg, g.count, B, max_len, dt, d2=True))
+        else:
+            C = cfg.sliding_window if g.local else max_len
+            caches.append(_attn_cache(cfg, g.count, B, C, dt))
+    return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+
+
+def _build_axes(cfg):
+    axes = []
+    for g in decode_groups(cfg):
+        if g.kind == "ssm":
+            axes.append(_ssm_cache_axes(cfg))
+        elif g.kind == "attn_shared":
+            axes.append(_attn_cache_axes(cfg, d2=True))
+        else:
+            axes.append(_attn_cache_axes(cfg))
+    return {"layers": axes, "pos": ()}
+
+
+# --------------------------------------------------------------------------
+# shared projection helpers (decode step)
+# --------------------------------------------------------------------------
+
+def _qkv_step(cfg, lp, h, pos, d2: bool = False):
+    """Project one token; returns q [B,1,H,D], k/v [B,1,KH,D] (roped)."""
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    if "bq" in lp:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    hd = q.shape[-1]
+    posb = jnp.full((h.shape[0], 1), pos)
+    cos, sin = L.rope_cache(posb, hd, cfg.rope_theta)
+    return L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin), v
+
+
+def _attn_decode_layer(cfg, lp, x, cache_l, pos, local: bool):
+    """One dense-layer decode: returns (x_out, new_cache_l)."""
+    h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a, new = _mla_decode(cfg, lp["attn"], h, cache_l, pos)
+    else:
+        q, k, v = _qkv_step(cfg, lp["attn"], h, pos)
+        C = cache_l["k"].shape[1]
+        slot = jnp.mod(pos, C) if local else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, slot, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, slot, 1)
+        if local:
+            # ring buffer: every filled slot is in-window by construction
+            n_valid = jnp.minimum(pos + 1, C)
+            o = L.decode_attention(q, kc, vc, n_valid)
+            # ring slots hold unordered positions; causal order is irrelevant
+            # to softmax (permutation-invariant), validity mask suffices.
+        else:
+            o = L.decode_attention(q, kc, vc, pos + 1,
+                                   window=cfg.sliding_window if local else None)
+        a = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        new = {"k": kc, "v": vc}
+    x = x + a
+    h2 = L.rms_norm(lp["norm2"], x, cfg.norm_eps)
+    if "moe" in lp:
+        f, _ = L.moe_block(lp["moe"], h2, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor)
+        x = x + f
+    else:
+        x = x + L.ffn_block(lp["ffn"], h2)
+    return x, new
+
+
+def _mla_decode(cfg, ap, h, cache_l, pos):
+    """MLA decode; absorbed matmuls when cfg.mla_absorb (perf path)."""
+    B = h.shape[0]
+    posb = jnp.full((B, 1), pos)
+    q = L.rms_norm({"scale": ap["q_norm"]}, h @ ap["wq_a"])
+    q = jnp.einsum("bsl,lhk->bshk", q, ap["wq_b"])
+    q_nope, q_rope = q[..., :cfg.qk_nope], q[..., cfg.qk_nope:]
+    cos, sin = L.rope_cache(posb, cfg.qk_rope, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+
+    kv_a = h @ ap["wkv_a"]
+    ckv_t, krope_t = kv_a[..., :-cfg.qk_rope], kv_a[..., -cfg.qk_rope:]
+    ckv_t = L.rms_norm({"scale": ap["kv_norm"]}, ckv_t)
+    krope_t = L.apply_rope(krope_t[..., None, :], cos, sin)[..., 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache_l["ckv"], ckv_t, pos, 1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache_l["krope"], krope_t, pos, 1)
+
+    S = ckv.shape[1]
+    mask = jnp.arange(S) < pos + 1
+    scale = 1.0 / math.sqrt(cfg.qk_nope + cfg.qk_rope)
+    wkv_k = ap["wkv_b"][..., :cfg.qk_nope]          # [lora, H, dn]
+    wkv_v = ap["wkv_b"][..., cfg.qk_nope:]          # [lora, H, dv]
+    if cfg.mla_absorb:
+        # score via latent space: q_nope absorbed into W^{UK}
+        q_lat = jnp.einsum("bshk,lhk->bshl", q_nope, wkv_k)   # [B,1,H,lora]
+        s = (jnp.einsum("bshl,bcl->bhsc", q_lat.astype(jnp.float32),
+                        ckv.astype(jnp.float32))
+             + jnp.einsum("bshk,bck->bhsc", q_rope.astype(jnp.float32),
+                          krope.astype(jnp.float32))) * scale
+        s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, -1)
+        o_lat = jnp.einsum("bhsc,bcl->bshl", p, ckv.astype(jnp.float32))
+        o = jnp.einsum("bshl,lhv->bshv", o_lat, wkv_v.astype(jnp.float32))
+    else:
+        # naive: re-expand K/V for the whole cache each step
+        kv = jnp.einsum("bcl,lhk->bchk", ckv, ap["wkv_b"])
+        k_nope, vfull = kv[..., :cfg.qk_nope], kv[..., cfg.qk_nope:]
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                      k_nope.shape[:-1] + (cfg.qk_rope,))], -1)
+        qf = jnp.concatenate([q_nope, q_rope], -1)
+        s = jnp.einsum("bshk,bchk->bhsc", qf.astype(jnp.float32),
+                       k_full.astype(jnp.float32)) * scale
+        s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, -1)
+        o = jnp.einsum("bhsc,bchv->bshv", p, vfull.astype(jnp.float32))
+    a = jnp.einsum("bshv,hvd->bsd", o.astype(h.dtype), ap["wo"])
+    return a, {"ckv": ckv, "krope": krope}
+
+
+def _ssm_decode_layer(cfg, lp, x, cache_l, pos):
+    """One mamba2-layer decode step (O(1) state update)."""
+    p = lp["ssm"]
+    h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+    di, N, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    H = cfg.ssm_heads
+    proj = h @ p["in_proj"]                          # [B,1,*]
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj[:, 0], [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    xbc = jnp.concatenate([xs, Bc, Cc], -1)          # [B, di+2N]
+    win = jnp.concatenate([cache_l["conv"], xbc[:, None]], 1)  # [B, K, C]
+    conv = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv = jax.nn.silu(conv)
+    xs, Bc, Cc = jnp.split(conv, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(-1, H, hd)
+    da = jnp.exp(dt * A[None, :])                    # [B,H]
+    state = cache_l["state"] * da[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", Bc, xh, dt)
+    y = jnp.einsum("bn,bhpn->bhp", Cc, state) + p["D"][None, :, None] * xh
+    y = y.reshape(-1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"]).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None]
+    return x + out, {"conv": win[:, 1:].astype(cache_l["conv"].dtype),
+                     "state": state}
+
+
+def _shared_attn_decode(cfg, sp, x, x0, cache_l, pos):
+    d2 = 2 * cfg.d_model
+    h2 = jnp.concatenate([x, x0], -1)
+    h2 = L.rms_norm(sp["norm1"], h2, cfg.norm_eps)
+    q, k, v = _qkv_step(cfg, sp["attn"], h2, pos, d2=True)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, pos, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, pos, 1)
+    o = L.decode_attention(q, kc, vc, pos + 1)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, sp["attn"]["wo"])
+    h = L.rms_norm(sp["norm2"], x, cfg.norm_eps)
+    x = x + L.ffn_block(sp["ffn"], h)
+    return x, {"k": kc, "v": vc}
+
+
+# --------------------------------------------------------------------------
+# public: decode_step / prefill
+# --------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One token for every sequence.  tokens: [B,1] ([B,K,1] codebooks).
+    Returns (logits [B,(K,)V], new_cache)."""
+    pos = cache["pos"]
+    if cfg.n_codebooks:
+        x = jnp.zeros((tokens.shape[0], 1, cfg.d_model), cfg.jdtype)
+        for c in range(cfg.n_codebooks):
+            x = x + jnp.take(params["embed"]["tok"][c], tokens[:, c], axis=0)
+    else:
+        x = L.embed_tokens(params["embed"], tokens)
+    x0 = x if cfg.family == "hybrid" else None
+
+    new_layers = []
+    for gi, g in enumerate(decode_groups(cfg)):
+        cache_l = cache["layers"][gi]
+        if g.kind == "attn_shared":
+            x, new = _shared_attn_decode(cfg, params["shared_attn"], x, x0,
+                                         cache_l_squeeze(cache_l), pos)
+            new_layers.append(cache_l_expand(new))
+            continue
+        stack = _slice_stack(params["stacks"][g.stack_idx], g.stack_off, g.count)
+
+        def body(x, inp, _kind=g.kind, _local=g.local):
+            lp, cl = inp
+            if _kind == "ssm":
+                x, new = _ssm_decode_layer(cfg, lp, x, cl, pos)
+            else:
+                x, new = _attn_decode_layer(cfg, lp, x, cl, pos, _local)
+            return x, new
+
+        x, new = jax.lax.scan(body, x, (stack, cache_l))
+        new_layers.append(new)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,kdv->bksv", x, params["heads"])[:, :, 0]
+    else:
+        logits = L.unembed(params["embed"], x)[:, 0]
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits.astype(jnp.float32), {"layers": new_layers, "pos": pos + 1}
+
+
+def cache_l_squeeze(cl):
+    return jax.tree.map(lambda a: a[0], cl)
+
+
+def cache_l_expand(cl):
+    return jax.tree.map(lambda a: a[None], cl)
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int,
+            vision_embeds=None, pat: PatternArgs = NO_PATTERN):
+    """Process a full prompt, returning (last-token logits, filled cache).
+
+    Memory-bounded: attention is blockwise; caches are written per layer.
+    """
+    if cfg.n_codebooks:
+        B, K, S = tokens.shape
+        x = jnp.zeros((B, S, cfg.d_model), cfg.jdtype)
+        for c in range(K):
+            x = x + jnp.take(params["embed"]["tok"][c], tokens[:, c], axis=0)
+    else:
+        B, S = tokens.shape
+        x = L.embed_tokens(params["embed"], tokens)
+    if cfg.vision_tokens and vision_embeds is not None:
+        vp = params["vision_proj"]
+        v = L.rms_norm(vp["norm"], vision_embeds, cfg.norm_eps)
+        v = jax.nn.gelu(v @ vp["w1"]) @ vp["w2"]
+        x = jnp.concatenate([v.astype(x.dtype), x], 1)
+        S = x.shape[1]
+    x0 = x if cfg.family == "hybrid" else None
+    x = constrain(x, ("batch", "res_seq", "embed"))
+
+    caches = []
+    for g in decode_groups(cfg):
+        stack = (None if g.stack_idx < 0 else
+                 _slice_stack(params["stacks"][g.stack_idx], g.stack_off,
+                              g.count))
+        if g.kind == "attn_shared":
+            x, cl = _shared_attn_prefill(cfg, params["shared_attn"], x, x0,
+                                         max_len)
+            caches.append(cl)
+            continue
+
+        def body(x, lp, _kind=g.kind, _local=g.local):
+            if _kind == "ssm":
+                return _ssm_prefill_layer(cfg, lp, x)
+            return _attn_prefill_layer(cfg, lp, x, max_len, _local)
+
+        x, cl = jax.lax.scan(body, x, stack)
+        caches.append(cl)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1:]
+    if cfg.n_codebooks:
+        logits = jnp.einsum("bsd,kdv->bksv", last, params["heads"])[:, :, 0]
+    else:
+        logits = L.unembed(params["embed"], last)[:, 0]
+    return logits.astype(jnp.float32), {
+        "layers": caches, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def _attn_prefill_layer(cfg, lp, x, max_len, local):
+    B, S, _ = x.shape
+    h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+    if cfg.mla:
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        q, k, v, ckv, krope = L.mla_project_qkv(
+            lp["attn"], h, positions, n_heads=cfg.n_heads,
+            qk_nope=cfg.qk_nope, qk_rope=cfg.qk_rope, v_dim=cfg.v_head_dim,
+            rope_theta=cfg.rope_theta)
+        o = L.blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+        a = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        ckv_c = jnp.zeros((B, max_len, cfg.kv_lora), cfg.jdtype)
+        kr_c = jnp.zeros((B, max_len, cfg.qk_rope), cfg.jdtype)
+        new = {"ckv": jax.lax.dynamic_update_slice_in_dim(
+                   ckv_c, ckv.astype(cfg.jdtype), 0, 1),
+               "krope": jax.lax.dynamic_update_slice_in_dim(
+                   kr_c, krope.astype(cfg.jdtype), 0, 1)}
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        if "bq" in lp["attn"]:
+            q, k, v = (q + lp["attn"]["bq"], k + lp["attn"]["bk"],
+                       v + lp["attn"]["bv"])
+        positions = jnp.arange(S)[None, :].repeat(B, 0)
+        cos, sin = L.rope_cache(positions, q.shape[-1], cfg.rope_theta)
+        q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+        window = cfg.sliding_window if local else None
+        o = L.blockwise_attention(q, k, v, causal=True, window=window,
+                                  chunk=cfg.attn_chunk)
+        a = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        C = cfg.sliding_window if local else max_len
+        if local:
+            # keep the last `window` keys, ring-aligned: slot = pos % C
+            kk, vv = _ring_pack(k, C), _ring_pack(v, C)
+        else:
+            pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+            kk, vv = jnp.pad(k, pad), jnp.pad(v, pad)
+        new = {"k": kk.astype(cfg.jdtype), "v": vv.astype(cfg.jdtype)}
+    x = x + a
+    h2 = L.rms_norm(lp["norm2"], x, cfg.norm_eps)
+    if "moe" in lp:
+        if cfg.moe_impl == "ep_shardmap":
+            f, _ = L.moe_block_ep(lp["moe"], h2, top_k=cfg.top_k,
+                                  n_experts=cfg.n_experts,
+                                  capacity_factor=cfg.capacity_factor)
+        else:
+            f, _ = L.moe_block(lp["moe"], h2, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor)
+        x = x + f
+    else:
+        x = x + L.ffn_block(lp["ffn"], h2)
+    return x, new
+
+
+def _ring_pack(k, C):
+    """Place the last C timesteps of k[B,S,...] at ring slots pos % C."""
+    B, S = k.shape[:2]
+    take = min(C, S)
+    tail = k[:, S - take:]
+    pos = jnp.arange(S - take, S) % C
+    buf = jnp.zeros((B, C) + k.shape[2:], k.dtype)
+    return buf.at[:, pos].set(tail)
+
+
+def _ssm_prefill_layer(cfg, lp, x):
+    p = lp["ssm"]
+    h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+    di, N, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_headdim
+    B, S, _ = h.shape
+    proj = h @ p["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], -1)
+    xbc = jnp.concatenate([xs, Bc, Cc], -1)
+    conv_tail = xbc[:, -(cfg.d_conv - 1):].astype(cfg.jdtype)
+    xbc = jax.nn.silu(L._causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                       cfg.d_conv))
+    xs, Bc, Cc = jnp.split(xbc, [di, di + N], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, cfg.ssm_heads, hd)
+    y, state = L._ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssd_chunk,
+                              return_state=True)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    y = (y * p["norm_scale"]).astype(x.dtype)
+    x = x + y @ p["out_proj"]
+    return x, {"conv": conv_tail, "state": state}
+
+
+def _shared_attn_prefill(cfg, sp, x, x0, max_len):
+    B, S, _ = x.shape
+    h2 = jnp.concatenate([x, x0], -1)
+    h2 = L.rms_norm(sp["norm1"], h2, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h2, sp["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h2, sp["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h2, sp["attn"]["wv"])
+    positions = jnp.arange(S)[None, :].repeat(B, 0)
+    cos, sin = L.rope_cache(positions, q.shape[-1], cfg.rope_theta)
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    o = L.blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, sp["attn"]["wo"])
+    h = L.rms_norm(sp["norm2"], x, cfg.norm_eps)
+    x = x + L.ffn_block(sp["ffn"], h)
+    pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+    cl = {"k": jnp.pad(k, pad).astype(cfg.jdtype)[None],
+          "v": jnp.pad(v, pad).astype(cfg.jdtype)[None]}
+    return x, cl

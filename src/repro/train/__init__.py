@@ -1,0 +1,3 @@
+"""Training: distributed step, driver loop, checkpointing."""
+from .train_step import make_train_step
+__all__ = ["make_train_step"]

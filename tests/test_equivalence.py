@@ -1,0 +1,52 @@
+"""Statistical equivalence (paper Eq. 2-3): per-unit marginal == global rate."""
+import numpy as np
+import pytest
+
+from repro.core.equivalence import (check_equivalence,
+                                    empirical_unit_drop_marginals,
+                                    exact_unit_drop_marginals)
+from repro.core.sampler import PatternSchedule, build_schedule
+
+
+@pytest.mark.parametrize("p", [0.3, 0.5, 0.7])
+def test_full_equivalence_report(p):
+    sched = build_schedule("rdp", p, n_units_blocks=8, dp_max=8, block=16)
+    report = check_equivalence(sched, dim=8 * 16, target=p, steps=3000)
+    assert report["uniform"]
+    # the entropy term (λ2=0.15) trades ≤2% rate error for sub-model
+    # diversity — the paper's E_p vs E_n balance (Alg. 1 line 7)
+    assert report["rate_err"] < 0.025
+    assert report["mc_max_err"] < 0.03
+
+
+def test_exact_marginal_uniform_and_correct():
+    dist = np.array([0.25, 0.25, 0.0, 0.5])      # dp ∈ {1,2,4}
+    marg = exact_unit_drop_marginals(dist, dim=32, block=2)
+    # analytic: 0.25·0 + 0.25·(1/2) + 0.5·(3/4) = 0.5
+    np.testing.assert_allclose(marg, 0.5, atol=1e-12)
+
+
+def test_sampler_determinism():
+    sched = PatternSchedule("rdp", np.array([0.3, 0.4, 0.0, 0.3]), block=4,
+                            seed=7)
+    a = [sched.sample(t) for t in range(50)]
+    b = [sched.sample(t) for t in range(50)]
+    assert a == b                       # pure function of (seed, step)
+    dps = {pat.dp for pat, _ in a}
+    assert dps <= {1, 2, 4}             # only supported patterns drawn
+    for pat, bias in a:
+        assert 0 <= bias < pat.dp
+
+
+def test_empirical_matches_exact():
+    dist = np.array([0.2, 0.5, 0.0, 0.3])
+    sched = PatternSchedule("rdp", dist, block=2, seed=3)
+    exact = exact_unit_drop_marginals(dist, dim=16, block=2)
+    emp = empirical_unit_drop_marginals(sched, dim=16, steps=8000)
+    np.testing.assert_allclose(emp, exact, atol=0.02)
+
+
+def test_expected_flop_fraction():
+    sched = PatternSchedule("rdp", np.array([0.5, 0.5]), block=1)
+    # E[1/dp] = 0.5·1 + 0.5·0.5 = 0.75
+    assert abs(sched.expected_flop_fraction() - 0.75) < 1e-9

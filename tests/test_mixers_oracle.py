@@ -1,0 +1,141 @@
+"""Oracle tests for the two core mixers every architecture depends on:
+
+* blockwise (flash-style) attention  vs  naive full-softmax reference
+* chunked SSD (Mamba-2)              vs  naive sequential recurrence
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.layers import _ssd_chunked, blockwise_attention, \
+    decode_attention
+
+
+def naive_attention(q, k, v, *, causal=True, window=None):
+    """Materialized-softmax reference. q:[B,S,H,D], k/v:[B,S,KH,D]."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+CASES = [
+    # (S, H, KH, D, window, chunk)
+    (32, 4, 4, 16, None, 8),      # MHA, chunk < S
+    (32, 8, 2, 16, None, 16),     # GQA 4:1
+    (33, 4, 1, 8, None, 8),       # MQA, ragged S vs chunk
+    (48, 4, 2, 16, 16, 8),        # sliding window
+    (16, 4, 4, 8, 4, 16),         # window smaller than chunk
+]
+
+
+@pytest.mark.parametrize("s,h,kh,d,window,chunk", CASES)
+def test_blockwise_matches_naive(s, h, kh, d, window, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (2, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (2, s, kh, d), jnp.float32)
+    v = jax.random.normal(ks[2], (2, s, kh, d), jnp.float32)
+    got = blockwise_attention(q, k, v, causal=True, window=window,
+                              chunk=chunk)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_naive_last_row():
+    """decode_attention over a cache == last row of full attention."""
+    S, H, KH, D = 24, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q_all = jax.random.normal(ks[0], (2, S, H, D), jnp.float32)
+    k_all = jax.random.normal(ks[1], (2, S, KH, D), jnp.float32)
+    v_all = jax.random.normal(ks[2], (2, S, KH, D), jnp.float32)
+    want = naive_attention(q_all, k_all, v_all)[:, -1:]
+    got = decode_attention(q_all[:, -1:], k_all, v_all, jnp.int32(S))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# SSD (Mamba-2)
+# --------------------------------------------------------------------------
+
+def naive_ssd(x, dt, A, Bc, Cc):
+    """Sequential SSM: h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t;
+    y_t = C_t h_t.  x:[B,L,H,P], dt:[B,L,H], A:[H], B/C:[B,L,N]."""
+    Bsz, L, H, P = x.shape
+    N = Bc.shape[-1]
+    h = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    ys = []
+    for t in range(L):
+        da = jnp.exp(dt[:, t] * A[None, :])                   # [B,H]
+        upd = jnp.einsum("bn,bhp,bh->bhpn", Bc[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32), dt[:, t])
+        h = h * da[..., None, None] + upd
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cc[:, t].astype(jnp.float32),
+                             h))
+    return jnp.stack(ys, 1)                                   # [B,L,H,P]
+
+
+@pytest.mark.parametrize("L,chunk", [(16, 4), (17, 4), (32, 8), (8, 16)])
+def test_ssd_chunked_matches_sequential(L, chunk):
+    Bsz, H, P, N = 2, 3, 4, 5
+    ks = jax.random.split(jax.random.PRNGKey(L), 4)
+    x = jax.random.normal(ks[0], (Bsz, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bc = jax.random.normal(ks[3], (Bsz, L, N), jnp.float32)
+    Cc = jax.random.normal(jax.random.PRNGKey(L + 1), (Bsz, L, N))
+    got = _ssd_chunked(x, dt, A, Bc, Cc, chunk)
+    want = naive_ssd(x, dt, A, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_final_state_continues_decode():
+    """Prefill final state == state after running the naive recurrence —
+    the prefill→decode handoff invariant."""
+    Bsz, L, H, P, N = 1, 12, 2, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(ks[0], (Bsz, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bsz, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bc = jax.random.normal(ks[3], (Bsz, L, N), jnp.float32)
+    Cc = jax.random.normal(jax.random.PRNGKey(4), (Bsz, L, N))
+    _, state = _ssd_chunked(x, dt, A, Bc, Cc, chunk=4, return_state=True)
+
+    h = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    for t in range(L):
+        da = jnp.exp(dt[:, t] * A[None, :])
+        h = h * da[..., None, None] + jnp.einsum(
+            "bn,bhp,bh->bhpn", Bc[:, t], x[:, t], dt[:, t])
+    np.testing.assert_allclose(np.asarray(state), np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(1, 3), st.sampled_from([5, 8, 13]))
+@settings(max_examples=10, deadline=None)
+def test_attention_rows_sum_to_one_property(b, s):
+    """Softmax invariant survives the online (chunked) computation: output
+    of attention over constant v == that constant."""
+    q = jax.random.normal(jax.random.PRNGKey(b), (b, s, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(b + 1), (b, s, 2, 8))
+    v = jnp.ones((b, s, 2, 8), jnp.float32) * 3.25
+    o = blockwise_attention(q, k, v, causal=True, chunk=4)
+    np.testing.assert_allclose(np.asarray(o), 3.25, rtol=1e-5)

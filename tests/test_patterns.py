@@ -1,0 +1,96 @@
+"""Property tests for the pattern algebra (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import patterns as P
+
+
+def divisor_cases():
+    return st.sampled_from([
+        # (n_blocks, dp)
+        (8, 1), (8, 2), (8, 4), (8, 8), (16, 2), (16, 4), (12, 3),
+        (12, 6), (24, 8), (128, 8), (108, 4),
+    ])
+
+
+@given(divisor_cases(), st.integers(0, 63))
+@settings(max_examples=60, deadline=None)
+def test_kept_indices_count_and_uniqueness(nb_dp, b):
+    nb, dp = nb_dp
+    idx = np.asarray(P.kept_block_indices(nb, dp, b % nb))
+    assert len(idx) == nb // dp
+    assert len(set(idx.tolist())) == len(idx)
+    assert ((idx >= 0) & (idx < nb)).all()
+
+
+@given(divisor_cases(), st.integers(0, 7), st.sampled_from([1, 4, 128]))
+@settings(max_examples=40, deadline=None)
+def test_mask_matches_indices(nb_dp, b, block):
+    nb, dp = nb_dp
+    b = b % dp
+    dim = nb * block
+    mask = np.asarray(P.rdp_mask(dim, dp, b, block))
+    idx = np.asarray(P.kept_unit_indices(dim, dp, b, block))
+    dense = np.zeros(dim)
+    dense[idx] = 1.0
+    np.testing.assert_array_equal(mask, dense)
+    # keep fraction is exactly 1/dp
+    assert mask.sum() == dim // dp
+
+
+@given(divisor_cases())
+@settings(max_examples=30, deadline=None)
+def test_bias_union_covers_everything(nb_dp):
+    """Every unit is kept by exactly one bias in {0..dp-1} — the root of the
+    statistical-equivalence argument (Eq. 2)."""
+    nb, dp = nb_dp
+    dim = nb * 4
+    cover = np.zeros(dim, int)
+    for b in range(dp):
+        idx = np.asarray(P.kept_unit_indices(dim, dp, b, 4))
+        cover[idx] += 1
+    np.testing.assert_array_equal(cover, np.ones(dim, int))
+
+
+@given(st.sampled_from([(4, 4), (8, 4), (8, 8), (4, 8)]),
+       st.integers(1, 8), st.integers(0, 7))
+@settings(max_examples=40, deadline=None)
+def test_tdp_mask_uniform_columns(trtc, dp, b):
+    """Diagonal TDP keeps exactly tr/dp tiles in every tile-column."""
+    tr, tc = trtc
+    if tr % dp:
+        dp = 1
+    tile = 4
+    m = np.asarray(P.tdp_mask(tr * tile, tc * tile, dp, b % max(dp, 1), tile))
+    per_tile = m.reshape(tr, tile, tc, tile).mean((1, 3))
+    assert set(np.unique(per_tile).tolist()) <= {0.0, 1.0}
+    np.testing.assert_array_equal(per_tile.sum(0),
+                                  np.full(tc, tr // dp))
+
+
+def test_scatter_roundtrip():
+    import jax.numpy as jnp
+    x = jnp.arange(2 * 16, dtype=jnp.float32).reshape(2, 16)
+    idx = P.kept_unit_indices(16, 4, 1, 1)
+    compact = jnp.take(x, idx, axis=-1)
+    full = P.scatter_units(compact, 16, 4, 1, 1)
+    np.testing.assert_array_equal(np.asarray(full)[:, np.asarray(idx)],
+                                  np.asarray(compact))
+    mask = np.asarray(P.rdp_mask(16, 4, 1, 1))
+    np.testing.assert_array_equal(np.asarray(full) * mask, np.asarray(full))
+
+
+def test_valid_periods():
+    assert P.valid_periods(8, 8) == [1, 2, 4, 8]
+    assert P.valid_periods(12, 8) == [1, 2, 3, 4, 6]
+    assert P.valid_periods(7, 8) == [1, 7]
+
+
+def test_bad_inputs_raise():
+    with pytest.raises(ValueError):
+        P.kept_block_count(8, 3)
+    with pytest.raises(ValueError):
+        P.num_blocks(10, 3)
+    with pytest.raises(ValueError):
+        P.Pattern("rdp", 0)

@@ -1,0 +1,72 @@
+"""Algorithm 1 (SGD-based Search) behaviour tests."""
+import numpy as np
+import pytest
+
+from repro.core.search import (SearchConfig, closed_form_two_point, entropy,
+                               expected_rate, pattern_rates,
+                               search_distribution)
+
+
+@pytest.mark.parametrize("p", [0.3, 0.5, 0.7])
+def test_search_hits_target_rate(p):
+    cfg = SearchConfig(target_rate=p, n_patterns=8)
+    k, loss, iters = search_distribution(cfg)
+    assert abs(expected_rate(k) - p) < 0.01, (p, expected_rate(k))
+    assert np.all(k >= 0) and abs(k.sum() - 1.0) < 1e-5
+    assert iters >= cfg.min_iters
+
+
+def test_entropy_term_diversifies():
+    """With the entropy term, the solution has wider support than the
+    two-point closed form (the paper's sub-model-diversity objective)."""
+    p = 0.5
+    k_search, _, _ = search_distribution(
+        SearchConfig(target_rate=p, n_patterns=8, lam1=0.7, lam2=0.3))
+    k_two = closed_form_two_point(p, 1, 2)
+    assert entropy(k_search) > entropy(np.pad(k_two, (0, 6))) + 0.3
+    # support: strictly more than 2 patterns carry >1% mass
+    assert (k_search > 0.01).sum() > 2
+
+
+def test_restricted_support():
+    """Divisor-period restriction: disallowed dp get (near-)zero mass."""
+    cfg = SearchConfig(target_rate=0.5, n_patterns=8, allowed=(1, 2, 4, 8))
+    k, _, _ = search_distribution(cfg)
+    for dp in (3, 5, 6, 7):
+        assert k[dp - 1] < 1e-6
+    assert abs(expected_rate(k) - 0.5) < 0.01
+
+
+def test_pattern_rates_formula():
+    """p_u = [0, 1/2, 2/3, 3/4, ...] — Alg. 1 line 2."""
+    pu = np.asarray(pattern_rates(5))
+    np.testing.assert_allclose(pu, [0, 1 / 2, 2 / 3, 3 / 4, 4 / 5], rtol=1e-6)
+
+
+def test_closed_form_two_point():
+    k = closed_form_two_point(0.5, 1, 2)
+    assert abs(expected_rate(k) - 0.5) < 1e-12
+    k = closed_form_two_point(0.7, 2, 4)
+    assert abs(expected_rate(k) - 0.7) < 1e-12
+    with pytest.raises(ValueError):
+        closed_form_two_point(0.9, 1, 2)   # 0.9 > max rate 1/2
+
+
+def test_rate_zero_and_extremes():
+    k, _, _ = search_distribution(SearchConfig(target_rate=0.0, n_patterns=8,
+                                               lam1=0.999, lam2=0.001))
+    assert expected_rate(k) < 0.02
+    # very high rate needs large dp in support
+    k, _, _ = search_distribution(SearchConfig(target_rate=0.85, n_patterns=16,
+                                               lam1=0.99, lam2=0.01))
+    assert abs(expected_rate(k) - 0.85) < 0.02
+
+
+def test_invalid_configs_raise():
+    with pytest.raises(ValueError):
+        SearchConfig(target_rate=1.0)
+    with pytest.raises(ValueError):
+        SearchConfig(target_rate=0.5, lam1=0.9, lam2=0.3)
+    with pytest.raises(ValueError):
+        search_distribution(SearchConfig(target_rate=0.5, allowed=(9,),
+                                         n_patterns=8))
