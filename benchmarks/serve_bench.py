@@ -1,0 +1,127 @@
+"""Serving benchmark: Poisson arrivals through the continuous-batching
+runtime, emitting ``BENCH_serve.json`` (TTFT / TPOT / queue delay /
+throughput + pattern-bucket accounting).
+
+Runs end-to-end on CPU: the MC-dropout ensemble members with ``dp > 1``
+execute their FFNs through the compact RDP Pallas kernels in interpret
+mode (``PatternArgs.impl="pallas"``), so the benchmark exercises the exact
+serving-time kernel path the paper's technique accelerates.
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--arch qwen2-1-5b]
+      [--n-requests 12] [--rate 20] [--capacity 4] [--ensemble 4]
+      [--ensemble-prob 0.5] [--out BENCH_serve.json]
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import get_smoke, normalize
+from repro.core.sampler import build_schedule
+from repro.models import init_lm, materialize
+from repro import serve
+
+
+def run_bench(args) -> dict:
+    cfg = get_smoke(normalize(args.arch))
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+
+    schedule = build_schedule(
+        cfg.pattern_kind, args.drop_rate, n_units_blocks=cfg.pattern_nb,
+        dp_max=args.dp_max, block=cfg.d_ff // cfg.pattern_nb,
+        seed=args.seed)
+
+    scheduler = serve.Scheduler(
+        cfg, params, capacity=args.capacity, max_len=args.max_len,
+        prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
+        schedule=schedule, pattern_impl=args.impl)
+    trace = serve.poisson_trace(
+        rate=args.rate, n_requests=args.n_requests, seed=args.seed,
+        prompt_len=(args.prompt_min, args.prompt_max),
+        max_new=(args.gen_min, args.gen_max), vocab=cfg.vocab,
+        ensemble=args.ensemble, ensemble_prob=args.ensemble_prob)
+
+    # WallClock: latency histograms measure real compute (incl. the
+    # first-call compiles — report steady-state separately if needed)
+    t0 = time.perf_counter()
+    out = serve.Server(scheduler, clock=serve.WallClock()).run(trace)
+    wall = time.perf_counter() - t0
+
+    telemetry = out["telemetry"]
+    ensembles = {}
+    for rid, members in sorted(out["results"].items()):
+        if len(members) > 1:
+            agg = serve.aggregate_ensemble(members)
+            ensembles[str(rid)] = {
+                "n_members": len(members),
+                "predictive_entropy": agg["predictive_entropy"],
+                "disagreement": agg["disagreement"],
+                "mean_ffn_flop_fraction": agg["mean_ffn_flop_fraction"],
+            }
+    return {
+        "bench": "serve",
+        "arch": normalize(args.arch),
+        "backend": jax.default_backend(),
+        "config": {
+            "n_requests": args.n_requests, "rate_req_s": args.rate,
+            "capacity": args.capacity, "prefill_chunk": args.prefill_chunk,
+            "max_queue": args.max_queue, "ensemble": args.ensemble,
+            "ensemble_prob": args.ensemble_prob,
+            "drop_rate": args.drop_rate, "dp_max": args.dp_max,
+            "pattern_impl": args.impl, "seed": args.seed,
+            "schedule_support_dp": schedule.support(),
+        },
+        "wall_s": wall,
+        "telemetry": telemetry,
+        "ensembles": ensembles,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1-5b")
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=48)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--max-queue", type=int, default=64)
+    ap.add_argument("--prompt-min", type=int, default=6)
+    ap.add_argument("--prompt-max", type=int, default=16)
+    ap.add_argument("--gen-min", type=int, default=4)
+    ap.add_argument("--gen-max", type=int, default=8)
+    ap.add_argument("--ensemble", type=int, default=4)
+    ap.add_argument("--ensemble-prob", type=float, default=0.5)
+    ap.add_argument("--drop-rate", type=float, default=0.3)
+    ap.add_argument("--dp-max", type=int, default=4)
+    ap.add_argument("--impl", default="pallas", choices=["pallas", "slice"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    result = run_bench(args)
+    t = result["telemetry"]
+    print(f"arch={result['arch']} backend={result['backend']} "
+          f"wall={result['wall_s']:.1f}s")
+    print(f"completed {t['requests_completed']}/{args.n_requests} requests "
+          f"({t['members_completed']} members), "
+          f"rejected {t['requests_rejected']}")
+    print(f"tokens: {t['tokens_generated']} generated / "
+          f"{t['prompt_tokens']} prompt; "
+          f"throughput {t.get('throughput_tok_s', 0):.1f} tok/s")
+    print(f"TTFT p50/p95: {t['ttft']['p50'] * 1e3:.1f}/"
+          f"{t['ttft']['p95'] * 1e3:.1f} ms | "
+          f"TPOT p50/p95: {t['tpot']['p50'] * 1e3:.1f}/"
+          f"{t['tpot']['p95'] * 1e3:.1f} ms")
+    print(f"queue delay p50: {t['queue_delay']['p50'] * 1e3:.1f} ms")
+    print(f"pattern buckets (tokens): {t['bucket_tokens']}")
+    print(f"mean FFN FLOP fraction vs dense: "
+          f"{t['mean_ffn_flop_fraction']:.3f}")
+    Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,59 +1,71 @@
-"""Beyond-paper: Monte-Carlo dropout ensembling at inference using
-Approximate Random Dropout patterns.
+"""Beyond-paper: Monte-Carlo dropout ensembling served by the
+continuous-batching runtime.
 
-The paper treats dropout purely as a training regularizer; but because our
-patterns make dropped compute *free*, MC-dropout uncertainty estimation
-becomes cheaper than the dense model: each ensemble member runs at 1/dp of
-the FLOPs.  This demo compares predictive entropy of the pattern-ensemble
-vs the deterministic forward on a smoke LM.
+The paper treats dropout purely as a training regularizer; but because the
+structured patterns make dropped compute *free*, MC-dropout uncertainty
+estimation becomes cheaper than a dense ensemble: each member runs at 1/dp
+of the FFN FLOPs.  Here a single ``Request`` with ``ensemble=E`` fans out
+into E member sequences; the scheduler groups members by sampled pattern
+bucket (dp, b) so same-bucket members decode in one batch through the
+compact RDP kernel path, then ``aggregate_ensemble`` folds the members into
+a predictive distribution.
 
 Run:  PYTHONPATH=src python examples/mc_dropout_serve.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
 from repro.core.sampler import build_schedule
 from repro.models import init_lm, materialize
-from repro.models.layers import PatternArgs
-from repro.models.transformer import forward
+from repro import serve
 
+E = 8
 cfg = get_smoke("qwen2_1_5b")
 params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
 rng = np.random.default_rng(0)
-tokens = jnp.asarray(rng.integers(0, cfg.vocab, (2, 24)), jnp.int32)
+prompt = rng.integers(0, cfg.vocab, 24).astype(np.int32)
 
-sched = build_schedule("rdp", 0.3, n_units_blocks=8, dp_max=8,
-                       block=cfg.pattern_nb)
+schedule = build_schedule("rdp", 0.3, n_units_blocks=cfg.pattern_nb,
+                          dp_max=4, block=cfg.d_ff // cfg.pattern_nb)
 
-# deterministic forward
-logits_det, _ = forward(cfg, params, tokens)
-p_det = jax.nn.softmax(logits_det[:, -1], -1)
+scheduler = serve.Scheduler(cfg, params, capacity=E, max_len=32,
+                            schedule=schedule, pattern_impl="pallas")
+server = serve.Server(scheduler, clock=serve.WallClock())
 
-# MC-pattern ensemble: T members, each a sampled (dp, b) sub-model at
-# 1/dp of the dense FLOPs
-T = 8
-probs = []
-flop_frac = 0.0
-for t in range(T):
-    pat, b = sched.sample(t)
-    pa = PatternArgs(dp=pat.dp, bias=b, kind="rdp", nb=cfg.pattern_nb)
-    logits, _ = forward(cfg, params, tokens, pa)
-    probs.append(jax.nn.softmax(logits[:, -1], -1))
-    flop_frac += 1.0 / pat.dp / T
-p_mc = jnp.stack(probs).mean(0)
+# deterministic baseline: same prompt, ensemble of 1 (dp=1 dense)
+# MC ensemble: one request fanning out into E pattern sub-models
+out = server.run([
+    serve.Request(rid=0, prompt=prompt, max_new_tokens=4, ensemble=1),
+    serve.Request(rid=1, prompt=prompt, max_new_tokens=4, ensemble=E,
+                  seed=7),
+])
+
+det = out["results"][0][0]
+members = out["results"][1]
+agg = serve.aggregate_ensemble(members)
 
 
 def entropy(p):
-    return float(-(p * jnp.log(p + 1e-9)).sum(-1).mean())
+    return float(-(p * np.log(p + 1e-9)).sum())
 
 
-print(f"ensemble of {T} pattern sub-models "
-      f"(mean FLOP fraction {flop_frac:.2f} of dense):")
+z = det["first_logits"] - det["first_logits"].max()
+p_det = np.exp(z) / np.exp(z).sum()
+
+buckets = sorted({(m["dp"], m["bias"]) for m in members})
+print(f"ensemble of {E} pattern sub-models, buckets (dp, b): {buckets}")
+print(f"  mean FFN FLOP fraction per member: "
+      f"{agg['mean_ffn_flop_fraction']:.2f} of dense")
 print(f"  deterministic predictive entropy: {entropy(p_det):.4f}")
-print(f"  MC-pattern    predictive entropy: {entropy(p_mc):.4f}")
-print(f"  (higher MC entropy = epistemic uncertainty surfaced; "
-      f"each member cost {flop_frac:.0%} of a dense forward)")
-disagree = float(jnp.abs(p_mc - p_det).sum(-1).mean())
-print(f"  mean L1(p_mc, p_det) = {disagree:.4f}")
+print(f"  MC-pattern    predictive entropy: {agg['predictive_entropy']:.4f}")
+print(f"  first-token disagreement across members: "
+      f"{agg['disagreement']:.2f}")
+print(f"  (higher MC entropy = epistemic uncertainty surfaced; members "
+      f"sharing a bucket decoded in one batch)")
+disagree = float(np.abs(agg["p_mean"] - p_det).sum())
+print(f"  L1(p_mc, p_det) = {disagree:.4f}")
+t = out["telemetry"]
+print(f"telemetry: {t['tokens_generated']} tokens, "
+      f"buckets {t['bucket_tokens']}, "
+      f"mean FLOP fraction {t['mean_ffn_flop_fraction']:.2f}")

@@ -1,69 +1,68 @@
-"""Serving example: batched prefill + decode with the engine's KV caches.
+"""Serving example: the continuous-batching runtime end-to-end.
 
-Loads a smoke-scale LM, prefills a batch of prompts, then greedily decodes
-tokens — demonstrating the prefill→decode cache handoff, ring-buffer local
-attention (gemma3) and SSM O(1) state (mamba2) with the same API.
+Submits a burst of requests to the Scheduler/Server stack — requests are
+admitted into cache-pool slots, prompts prefill in chunks interleaved with
+decode, sequences join/leave the decode batch per step, and telemetry
+reports TTFT/TPOT.  (The low-level prefill→decode engine API this example
+used to demonstrate is still available as ``repro.serve.prefill`` /
+``decode_step``; tests/test_serve.py covers it.)
 
 Run:  PYTHONPATH=src python examples/serve_lm.py [--arch gemma3-1b]
-      [--batch 4] [--prompt-len 24] [--gen 16]
+      [--requests 4] [--prompt-len 24] [--gen 8]
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke, normalize
 from repro.models import init_lm, materialize
-from repro.serve import engine
+from repro import serve
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_smoke(normalize(args.arch))
+    if cfg.n_codebooks or cfg.vision_tokens:
+        raise SystemExit(f"{args.arch}: modality frontends need extra "
+                         f"inputs; use a text LM arch for this example")
     params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
-    max_len = args.prompt_len + args.gen + 1
+
+    max_len = args.prompt_len + args.gen + 2
+    scheduler = serve.Scheduler(cfg, params, capacity=args.capacity,
+                                max_len=max_len,
+                                prefill_chunk=args.prefill_chunk)
+    print(f"{cfg.name}: chunked prefill "
+          f"{'ON' if scheduler.chunked else 'OFF (whole-prompt fallback)'}")
 
     rng = np.random.default_rng(0)
-    if cfg.n_codebooks:
-        prompts = rng.integers(0, cfg.vocab,
-                               (args.batch, cfg.n_codebooks, args.prompt_len))
-    else:
-        prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
-    prompts = jnp.asarray(prompts, jnp.int32)
+    trace = [serve.Request(
+        rid=i,
+        prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
+        max_new_tokens=args.gen,
+        arrival_time=0.0,
+    ) for i in range(args.requests)]
 
-    t0 = time.perf_counter()
-    logits, cache = engine.prefill(cfg, params, prompts, max_len)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
-          f"{t_prefill*1e3:.1f} ms -> cache pos {int(cache['pos'])}")
-
-    decode = jax.jit(lambda p, c, t: engine.decode_step(cfg, p, c, t))
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)[..., None]
-    if cfg.n_codebooks:
-        tok = tok.reshape(args.batch, cfg.n_codebooks, 1)
-    generated = []
-    t0 = time.perf_counter()
-    for _ in range(args.gen):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)[..., None]
-        if cfg.n_codebooks:
-            tok = tok.reshape(args.batch, cfg.n_codebooks, 1)
-        generated.append(np.asarray(tok)[..., 0])
-    jax.block_until_ready(logits)
-    t_dec = time.perf_counter() - t0
-    print(f"decode: {args.gen} steps in {t_dec*1e3:.1f} ms "
-          f"({t_dec/args.gen*1e3:.2f} ms/token incl. first-call compile)")
-    seq = np.stack(generated, -1)
-    print(f"greedy continuation (seq 0): {seq[0].ravel()[:16].tolist()}")
+    out = serve.Server(scheduler, clock=serve.WallClock()).run(trace)
+    t = out["telemetry"]
+    print(f"served {t['requests_completed']} requests, "
+          f"{t['tokens_generated']} tokens in {t['duration_s']:.2f}s "
+          f"({t.get('throughput_tok_s', 0):.1f} tok/s incl. compiles)")
+    print(f"TTFT p50 {t['ttft']['p50'] * 1e3:.1f} ms | "
+          f"TPOT p50 {t['tpot']['p50'] * 1e3:.1f} ms | "
+          f"decode steps {t['decode_steps']} | "
+          f"prefill chunks {t['prefill_chunks']}")
+    for rid, members in sorted(out["results"].items()):
+        print(f"  req {rid}: greedy continuation "
+              f"{members[0]['tokens'][:8]}")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,16 @@ from repro.parallel.sharding import constrain
 
 Init = jax.nn.initializers
 
+# shard_map moved from jax.experimental to the jax namespace (and its
+# replication-check kwarg was renamed check_rep -> check_vma) across JAX
+# releases; resolve whichever this runtime ships.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_NOCHECK = {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_NOCHECK = {"check_rep": False}
+
 
 # --------------------------------------------------------------------------
 # Pattern plumbing
@@ -39,11 +49,16 @@ class PatternArgs:
     without communication).  ``kind`` selects RDP (neuron) vs TDP (synapse).
     ``nb`` — number of pattern blocks the hidden dim is divided into
     (per-shard-uniform; must be divisible by dp).
+    ``impl`` — how RDP FFNs execute the compact matmuls: "slice" (XLA
+    strided-slice gather, the training default) or "pallas" (the
+    kernels/rdp_matmul compact-DMA kernels; interpret-mode on CPU) — the
+    serving runtime uses "pallas" so ensemble members hit the kernel path.
     """
     dp: int = 1
     bias: int = 0
     kind: str = "rdp"
     nb: int = 128
+    impl: str = "slice"
 
     @property
     def active(self) -> bool:
@@ -280,6 +295,14 @@ def ffn_block(params, x, pat: PatternArgs = NO_PATTERN, *, layer: int = 0,
     dp, b = pat.dp, pat.layer_bias(layer)
     w_up, w_down = params["w_up"], params["w_down"]
     w_gate = params.get("w_gate")
+    if pat.active and pat.kind == "rdp" and pat.impl == "pallas":
+        # compact Pallas kernels: kept column/row blocks are the only ones
+        # DMA'd (kernels/rdp_matmul); same kept set and ×dp placement as the
+        # slice path below, so the two impls are numerically interchangeable
+        from repro.kernels import ops as KO
+        out = KO.rdp_ffn(x, w_up, w_down, jnp.int32(b), dp=dp, act=act,
+                         w_gate=w_gate, block=w_up.shape[-1] // pat.nb)
+        return constrain(out, ("batch", "res_seq", "embed"))
     if pat.active and pat.kind == "rdp":
         w_up = _slice_blocks(w_up, 1, pat.nb, dp, b)
         w_down = _slice_blocks(w_down, 0, pat.nb, dp, b)
@@ -519,11 +542,11 @@ def moe_block_ep(params, x, *, top_k: int, n_experts: int,
                   (batch_axes[0] if batch_axes else None),
                   "model" if n_s > 1 else None, None)
     ep_spec = PSpec(ep_axes if len(ep_axes) > 1 else ep_axes[0])
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         mapped, mesh=mesh,
         in_specs=(xspec, PSpec(), ep_spec, ep_spec, ep_spec),
         out_specs=(xspec, PSpec()),
-        check_vma=False,
+        **_SHARD_MAP_NOCHECK,
     )(x, params["router"], params["w_up"], params["w_gate"],
       params["w_down"])
 

@@ -1,3 +1,19 @@
-"""Serving: prefill + single-token decode with per-family caches."""
-from .engine import decode_step, prefill, init_cache, decode_groups
-__all__ = ["decode_step", "prefill", "init_cache", "decode_groups"]
+"""Serving: engine (prefill/decode + caches) and the continuous-batching
+runtime (scheduler, cache pool, telemetry, server driver) — DESIGN.md §7."""
+from .engine import (decode_step, decode_step_ragged, prefill,
+                     prefill_extend, init_cache, decode_groups,
+                     supports_chunked_prefill)
+from .cache_pool import CachePool, CachePoolError
+from .metrics import Histogram, Telemetry
+from .scheduler import Request, Scheduler, Sequence
+from .server import (Server, StepCostModel, VirtualClock, WallClock,
+                     aggregate_ensemble, poisson_trace)
+
+__all__ = [
+    "decode_step", "decode_step_ragged", "prefill", "prefill_extend",
+    "init_cache", "decode_groups", "supports_chunked_prefill",
+    "CachePool", "CachePoolError", "Histogram", "Telemetry",
+    "Request", "Scheduler", "Sequence",
+    "Server", "StepCostModel", "VirtualClock", "WallClock",
+    "aggregate_ensemble", "poisson_trace",
+]

@@ -1,0 +1,99 @@
+"""Slot-based cache pool for the continuous-batching runtime (DESIGN.md §7).
+
+A fixed-capacity pool of per-sequence cache slots.  Admitting a request
+*allocates* a slot, finishing it *frees* the slot — the pool never builds a
+new cache pytree per request.  Because JAX arrays are immutable, "reuse"
+means two concrete things here:
+
+* the zeroed cache template (``engine.init_cache(cfg, 1, max_len)``) is
+  materialized ONCE; every idle slot aliases those same zero buffers, and
+  ``free`` re-aliases them (device memory for idle slots is the template's,
+  not per-slot copies);
+* the host-side structure (decode-group layout, pytree construction) is
+  built once instead of per request.
+
+Freeing resets the slot to the template — mandatory for correctness, not
+hygiene: SSM conv/state and ring-buffer slots are NOT masked by ``pos`` the
+way linear attention caches are, so a recycled slot must start from zeros.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.transformer import ModelConfig
+
+from . import engine
+
+
+class CachePoolError(RuntimeError):
+    """Invariant violation: double free, foreign slot, use-after-free."""
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocated: int = 0      # total successful allocate() calls
+    freed: int = 0
+    failed: int = 0         # allocate() calls that found the pool exhausted
+    high_water: int = 0     # max slots simultaneously in use
+
+
+class CachePool:
+    """Fixed pool of single-sequence KV/SSM cache slots."""
+
+    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.cfg = cfg
+        self.capacity = capacity
+        self.max_len = max_len
+        self._template = engine.init_cache(cfg, 1, max_len)[0]
+        self._caches = [self._template] * capacity
+        self._in_use = [False] * capacity
+        # LIFO free list: the most recently freed slot is reused first
+        # (its buffers are the warmest)
+        self._free = list(range(capacity - 1, -1, -1))
+        self.stats = PoolStats()
+
+    # ------------------------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use_count(self) -> int:
+        return self.capacity - len(self._free)
+
+    def allocate(self) -> int | None:
+        """Claim a slot (reset to the zero template); None when exhausted."""
+        if not self._free:
+            self.stats.failed += 1
+            return None
+        slot = self._free.pop()
+        self._in_use[slot] = True
+        self._caches[slot] = self._template
+        self.stats.allocated += 1
+        self.stats.high_water = max(self.stats.high_water, self.in_use_count)
+        return slot
+
+    def free(self, slot: int) -> None:
+        self._check(slot)
+        self._in_use[slot] = False
+        self._caches[slot] = self._template
+        self._free.append(slot)
+        self.stats.freed += 1
+
+    def read(self, slot: int):
+        self._check(slot)
+        return self._caches[slot]
+
+    def write(self, slot: int, cache) -> None:
+        self._check(slot)
+        self._caches[slot] = cache
+
+    def _check(self, slot: int) -> None:
+        if not 0 <= slot < self.capacity:
+            raise CachePoolError(f"slot {slot} outside pool of "
+                                 f"{self.capacity}")
+        if not self._in_use[slot]:
+            raise CachePoolError(f"slot {slot} is not allocated "
+                                 f"(double free / use-after-free)")

@@ -11,9 +11,17 @@ state.  MLA caches the 512-dim latent + 64-dim rope key (not full K/V) —
 DeepSeek's cache saving — and decodes with *absorbed* matmuls when
 ``cfg.mla_absorb``.
 
-Approximate Random Dropout at serving: the paper's technique is a training
-regularizer; serving uses dp=1 (eval mode).  The entry points still accept a
-PatternArgs so policy lives with the caller, e.g. MC-dropout ensembles.
+Approximate Random Dropout at serving: plain serving uses dp=1 (eval mode),
+but every entry point takes a ``PatternArgs`` and applies it to the FFN/MoE
+blocks exactly like the train-path ``forward`` does — that is what lets the
+MC-dropout ensemble runtime (serve/scheduler.py) run each ensemble member as
+a (dp, b) sub-model at 1/dp of the FFN FLOPs.  SSM prefill/decode layers stay
+in eval mode (their custom serving kernels are pattern-free; DESIGN.md §7).
+
+Continuous batching support: ``decode_step_ragged`` decodes a batch whose
+sequences sit at *different* positions (per-sequence ``pos`` vector), and
+``prefill_extend`` processes one chunk of a prompt against an existing cache
+so long prefills can be interleaved with decode steps (chunked prefill).
 """
 from __future__ import annotations
 
@@ -26,7 +34,8 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.layers import NO_PATTERN, PatternArgs
-from repro.models.transformer import ModelConfig, layer_groups, _ffn_pat
+from repro.models.transformer import (ModelConfig, layer_groups, _ffn_pat,
+                                      _moe_pat)
 from repro.parallel.sharding import constrain
 
 
@@ -166,7 +175,8 @@ def _qkv_step(cfg, lp, h, pos, d2: bool = False):
     return L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin), v
 
 
-def _attn_decode_layer(cfg, lp, x, cache_l, pos, local: bool):
+def _attn_decode_layer(cfg, lp, x, cache_l, pos, local: bool,
+                       pat: PatternArgs = NO_PATTERN):
     """One dense-layer decode: returns (x_out, new_cache_l)."""
     h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
     if cfg.mla:
@@ -192,10 +202,11 @@ def _attn_decode_layer(cfg, lp, x, cache_l, pos, local: bool):
     h2 = L.rms_norm(lp["norm2"], x, cfg.norm_eps)
     if "moe" in lp:
         f, _ = L.moe_block(lp["moe"], h2, top_k=cfg.top_k,
-                           capacity_factor=cfg.capacity_factor)
+                           capacity_factor=cfg.capacity_factor,
+                           pat=_moe_pat(cfg, pat))
         x = x + f
     else:
-        x = x + L.ffn_block(lp["ffn"], h2)
+        x = x + L.ffn_block(lp["ffn"], h2, _ffn_pat(cfg, pat))
     return x, new
 
 
@@ -280,7 +291,8 @@ def _ssm_decode_layer(cfg, lp, x, cache_l, pos):
                      "state": state}
 
 
-def _shared_attn_decode(cfg, sp, x, x0, cache_l, pos):
+def _shared_attn_decode(cfg, sp, x, x0, cache_l, pos,
+                        pat: PatternArgs = NO_PATTERN):
     d2 = 2 * cfg.d_model
     h2 = jnp.concatenate([x, x0], -1)
     h2 = L.rms_norm(sp["norm1"], h2, cfg.norm_eps)
@@ -290,7 +302,7 @@ def _shared_attn_decode(cfg, sp, x, x0, cache_l, pos):
     o = L.decode_attention(q, kc, vc, pos + 1)
     x = x + jnp.einsum("bshk,hkd->bsd", o, sp["attn"]["wo"])
     h = L.rms_norm(sp["norm2"], x, cfg.norm_eps)
-    x = x + L.ffn_block(sp["ffn"], h)
+    x = x + L.ffn_block(sp["ffn"], h, _ffn_pat(cfg, pat))
     return x, {"k": kc, "v": vc}
 
 
@@ -298,7 +310,8 @@ def _shared_attn_decode(cfg, sp, x, x0, cache_l, pos):
 # public: decode_step / prefill
 # --------------------------------------------------------------------------
 
-def decode_step(cfg: ModelConfig, params, cache, tokens):
+def decode_step(cfg: ModelConfig, params, cache, tokens,
+                pat: PatternArgs = NO_PATTERN):
     """One token for every sequence.  tokens: [B,1] ([B,K,1] codebooks).
     Returns (logits [B,(K,)V], new_cache)."""
     pos = cache["pos"]
@@ -315,7 +328,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
         cache_l = cache["layers"][gi]
         if g.kind == "attn_shared":
             x, new = _shared_attn_decode(cfg, params["shared_attn"], x, x0,
-                                         cache_l_squeeze(cache_l), pos)
+                                         cache_l_squeeze(cache_l), pos, pat)
             new_layers.append(cache_l_expand(new))
             continue
         stack = _slice_stack(params["stacks"][g.stack_idx], g.stack_off, g.count)
@@ -325,7 +338,7 @@ def decode_step(cfg: ModelConfig, params, cache, tokens):
             if _kind == "ssm":
                 x, new = _ssm_decode_layer(cfg, lp, x, cl, pos)
             else:
-                x, new = _attn_decode_layer(cfg, lp, x, cl, pos, _local)
+                x, new = _attn_decode_layer(cfg, lp, x, cl, pos, _local, pat)
             return x, new
 
         x, new = jax.lax.scan(body, x, (stack, cache_l))
@@ -354,6 +367,9 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int,
     """Process a full prompt, returning (last-token logits, filled cache).
 
     Memory-bounded: attention is blockwise; caches are written per layer.
+    ``pat`` is applied to the FFN/MoE blocks like the train-path forward
+    (SSM layers stay eval-mode) — MC-dropout ensemble members prefill
+    through the same (dp, b) sub-model they decode with.
     """
     if cfg.n_codebooks:
         B, K, S = tokens.shape
@@ -379,14 +395,14 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int,
                               g.count))
         if g.kind == "attn_shared":
             x, cl = _shared_attn_prefill(cfg, params["shared_attn"], x, x0,
-                                         max_len)
+                                         max_len, pat)
             caches.append(cl)
             continue
 
         def body(x, lp, _kind=g.kind, _local=g.local):
             if _kind == "ssm":
                 return _ssm_prefill_layer(cfg, lp, x)
-            return _attn_prefill_layer(cfg, lp, x, max_len, _local)
+            return _attn_prefill_layer(cfg, lp, x, max_len, _local, pat)
 
         x, cl = jax.lax.scan(body, x, stack)
         caches.append(cl)
@@ -401,7 +417,8 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int,
         "layers": caches, "pos": jnp.asarray(S, jnp.int32)}
 
 
-def _attn_prefill_layer(cfg, lp, x, max_len, local):
+def _attn_prefill_layer(cfg, lp, x, max_len, local,
+                        pat: PatternArgs = NO_PATTERN):
     B, S, _ = x.shape
     h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
     if cfg.mla:
@@ -446,13 +463,15 @@ def _attn_prefill_layer(cfg, lp, x, max_len, local):
         if cfg.moe_impl == "ep_shardmap":
             f, _ = L.moe_block_ep(lp["moe"], h2, top_k=cfg.top_k,
                                   n_experts=cfg.n_experts,
-                                  capacity_factor=cfg.capacity_factor)
+                                  capacity_factor=cfg.capacity_factor,
+                                  pat=_moe_pat(cfg, pat))
         else:
             f, _ = L.moe_block(lp["moe"], h2, top_k=cfg.top_k,
-                               capacity_factor=cfg.capacity_factor)
+                               capacity_factor=cfg.capacity_factor,
+                               pat=_moe_pat(cfg, pat))
         x = x + f
     else:
-        x = x + L.ffn_block(lp["ffn"], h2)
+        x = x + L.ffn_block(lp["ffn"], h2, _ffn_pat(cfg, pat))
     return x, new
 
 
@@ -493,7 +512,8 @@ def _ssm_prefill_layer(cfg, lp, x):
     return x, {"conv": conv_tail, "state": state}
 
 
-def _shared_attn_prefill(cfg, sp, x, x0, max_len):
+def _shared_attn_prefill(cfg, sp, x, x0, max_len,
+                         pat: PatternArgs = NO_PATTERN):
     B, S, _ = x.shape
     h2 = jnp.concatenate([x, x0], -1)
     h2 = L.rms_norm(sp["norm1"], h2, cfg.norm_eps)
@@ -506,8 +526,149 @@ def _shared_attn_prefill(cfg, sp, x, x0, max_len):
     o = L.blockwise_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
     x = x + jnp.einsum("bshk,hkd->bsd", o, sp["attn"]["wo"])
     h = L.rms_norm(sp["norm2"], x, cfg.norm_eps)
-    x = x + L.ffn_block(sp["ffn"], h)
+    x = x + L.ffn_block(sp["ffn"], h, _ffn_pat(cfg, pat))
     pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
     cl = {"k": jnp.pad(k, pad).astype(cfg.jdtype)[None],
           "v": jnp.pad(v, pad).astype(cfg.jdtype)[None]}
     return x, cl
+
+
+# --------------------------------------------------------------------------
+# continuous batching primitives: ragged decode + chunked prefill
+# --------------------------------------------------------------------------
+
+def decode_step_ragged(cfg: ModelConfig, params, cache, tokens,
+                       pat: PatternArgs = NO_PATTERN):
+    """One decode step for a batch whose sequences sit at DIFFERENT positions.
+
+    ``cache["pos"]`` is a per-sequence [B] int32 vector (continuous batching
+    joins sequences mid-flight, so a shared scalar position no longer
+    exists).  Implemented as a vmap of the single-sequence ``decode_step``
+    over the cache's batch axis — per-sequence ring slots, validity masks and
+    SSM state updates all follow from the scalar-pos semantics.
+
+    tokens: [B, 1] ([B, K, 1] codebooks).  Returns (logits [B,(K,)V],
+    new_cache with pos incremented per sequence).
+    """
+
+    def one(cache_layers, tok, p):
+        c = {"layers": jax.tree.map(lambda a: a[:, None], cache_layers),
+             "pos": p}
+        logits, new = decode_step(cfg, params, c, tok[None], pat)
+        return (logits[0],
+                jax.tree.map(lambda a: a[:, 0], new["layers"]),
+                new["pos"])
+
+    logits, new_layers, new_pos = jax.vmap(
+        one, in_axes=(1, 0, 0), out_axes=(0, 1, 0))(
+            cache["layers"], tokens, cache["pos"])
+    return logits, {"layers": new_layers, "pos": new_pos}
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill covers the plain-attention families.  Ring-buffer
+    (sliding-window), MLA-latent, SSM-state and modality-frontend caches
+    need whole-prompt prefill (DESIGN.md §7) — the scheduler falls back to
+    a single chunk for those."""
+    return (cfg.sliding_window is None and not cfg.mla
+            and cfg.family in ("dense", "moe") and not cfg.n_codebooks
+            and not cfg.vision_tokens)
+
+
+def _chunk_attention(q, k_cache, v_cache, pos0):
+    """Causal attention of a chunk of queries at positions [pos0, pos0+Sc)
+    over the full cache (keys already written at their positions).
+
+    q: [B, Sc, H, D]; caches: [B, C, KH, D].  GQA grouping matches
+    ``decode_attention`` (query heads kh*G..kh*G+G-1 read kv head kh).
+    """
+    B, Sc, H, D = q.shape
+    C, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sc, KH, G, D)
+    s = jnp.einsum("bshgd,bchd->bhgsc", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(D)
+    # query at global position pos0+i sees cache slots [0, pos0+i]
+    mask = (jnp.arange(C)[None, :]
+            <= (pos0 + jnp.arange(Sc))[:, None])          # [Sc, C]
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgsc,bchd->bshgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Sc, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+def _attn_chunk_layer(cfg, lp, x, cache_l, pos0, pat: PatternArgs):
+    """Chunk-extend one dense/moe attention layer: write the chunk's K/V at
+    [pos0, pos0+Sc), attend causally over the cache, run the FFN."""
+    B, Sc, _ = x.shape
+    h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+    if "bq" in lp["attn"]:
+        q, k, v = (q + lp["attn"]["bq"], k + lp["attn"]["bk"],
+                   v + lp["attn"]["bv"])
+    positions = pos0 + jnp.arange(Sc)[None, :].repeat(B, 0)
+    cos, sin = L.rope_cache(positions, q.shape[-1], cfg.rope_theta)
+    q, k = L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["k"], k.astype(cache_l["k"].dtype), pos0, 1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["v"], v.astype(cache_l["v"].dtype), pos0, 1)
+    o = _chunk_attention(q, kc, vc, pos0)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+    h2 = L.rms_norm(lp["norm2"], x, cfg.norm_eps)
+    if "moe" in lp:
+        # same impl dispatch as _attn_prefill_layer: chunked prefill must
+        # be the single-shot prefill decomposed, EP path included
+        if cfg.moe_impl == "ep_shardmap":
+            f, _ = L.moe_block_ep(lp["moe"], h2, top_k=cfg.top_k,
+                                  n_experts=cfg.n_experts,
+                                  capacity_factor=cfg.capacity_factor,
+                                  pat=_moe_pat(cfg, pat))
+        else:
+            f, _ = L.moe_block(lp["moe"], h2, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               pat=_moe_pat(cfg, pat))
+        x = x + f
+    else:
+        x = x + L.ffn_block(lp["ffn"], h2, _ffn_pat(cfg, pat))
+    return x, {"k": kc, "v": vc}
+
+
+def prefill_extend(cfg: ModelConfig, params, cache, tokens,
+                   pat: PatternArgs = NO_PATTERN):
+    """Extend a partially-filled cache by one prompt chunk.
+
+    tokens: [B, Sc] — the next Sc prompt tokens of every sequence, starting
+    at the shared position ``cache["pos"]`` (scalar; the continuous-batching
+    scheduler prefills one sequence at a time, B=1).  Returns (last-token
+    logits [B, V], cache advanced to pos+Sc).  Starting from a zeroed cache
+    at pos=0, chunked prefill over the whole prompt is numerically the
+    single-shot ``prefill`` decomposed — same executables across chunks of
+    equal length, so a long prompt costs no extra compiles.
+    """
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(f"{cfg.name}: arch does not support chunked prefill")
+    pos0 = cache["pos"]
+    x = L.embed_tokens(params["embed"], tokens)
+    x = constrain(x, ("batch", "res_seq", "embed"))
+
+    new_layers = []
+    for gi, g in enumerate(decode_groups(cfg)):
+        stack = _slice_stack(params["stacks"][g.stack_idx], g.stack_off,
+                             g.count)
+
+        def body(x, inp):
+            lp, cl = inp
+            return _attn_chunk_layer(cfg, lp, x, cl, pos0, pat)
+
+        x, new = jax.lax.scan(body, x, (stack, cache["layers"][gi]))
+        new_layers.append(new)
+
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x[:, -1:])[:, 0]
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits.astype(jnp.float32), {
+        "layers": new_layers, "pos": pos0 + tokens.shape[1]}

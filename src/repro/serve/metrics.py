@@ -1,0 +1,109 @@
+"""Serving telemetry: latency histograms + throughput counters (DESIGN.md §7).
+
+All timestamps come from the server's injectable clock, so the same module
+serves wall-clock benchmarking and virtual-clock deterministic replay.  The
+``snapshot()`` dict is what ``benchmarks/serve_bench.py`` writes to
+``BENCH_serve.json``.
+
+Latency definitions (standard LLM-serving conventions):
+* **TTFT**  — submit → first generated token of a sequence.
+* **TPOT**  — gap between consecutive generated tokens of one sequence
+  (each decode token contributes one sample).
+* **queue delay** — submit → slot admission (pure scheduler wait).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class Histogram:
+    """Exact histogram over recorded samples (serving runs are bounded, so
+    we keep raw values and compute percentiles on demand)."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._values: list[float] = []
+
+    def record(self, value: float) -> None:
+        self._values.append(float(value))
+
+    @property
+    def count(self) -> int:
+        return len(self._values)
+
+    def summary(self) -> dict:
+        if not self._values:
+            return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
+                    "p95": 0.0, "max": 0.0}
+        v = np.asarray(self._values, np.float64)
+        return {
+            "count": int(v.size),
+            "mean": float(v.mean()),
+            "p50": float(np.percentile(v, 50)),
+            "p90": float(np.percentile(v, 90)),
+            "p95": float(np.percentile(v, 95)),
+            "max": float(v.max()),
+        }
+
+
+@dataclasses.dataclass
+class Telemetry:
+    """Mutable metric sink the scheduler/server record into."""
+
+    ttft: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("ttft"))
+    tpot: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("tpot"))
+    queue_delay: Histogram = dataclasses.field(
+        default_factory=lambda: Histogram("queue_delay"))
+
+    tokens_generated: int = 0
+    prompt_tokens: int = 0
+    requests_completed: int = 0
+    requests_rejected: int = 0
+    members_completed: int = 0
+    decode_steps: int = 0
+    prefill_chunks: int = 0
+
+    # paper tie-in: FLOP cost of generated tokens relative to dense.  Each
+    # token of a (dp, b) ensemble member counts 1/dp of a dense-FFN token.
+    ffn_flop_weighted_tokens: float = 0.0
+    # tokens decoded per pattern bucket, keyed "(dp, b)"
+    bucket_tokens: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def record_decode_tokens(self, dp: int, bias: int, n: int) -> None:
+        self.tokens_generated += n
+        self.ffn_flop_weighted_tokens += n / dp
+        key = f"dp={dp},b={bias}"
+        self.bucket_tokens[key] = self.bucket_tokens.get(key, 0) + n
+
+    def mean_ffn_flop_fraction(self) -> float:
+        """Mean per-token FFN FLOP fraction vs dense (1.0 = no dropout)."""
+        if self.tokens_generated == 0:
+            return 1.0
+        return self.ffn_flop_weighted_tokens / self.tokens_generated
+
+    def snapshot(self, duration_s: Optional[float] = None) -> dict:
+        snap = {
+            "ttft": self.ttft.summary(),
+            "tpot": self.tpot.summary(),
+            "queue_delay": self.queue_delay.summary(),
+            "tokens_generated": self.tokens_generated,
+            "prompt_tokens": self.prompt_tokens,
+            "requests_completed": self.requests_completed,
+            "requests_rejected": self.requests_rejected,
+            "members_completed": self.members_completed,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "mean_ffn_flop_fraction": self.mean_ffn_flop_fraction(),
+            "bucket_tokens": dict(self.bucket_tokens),
+        }
+        if duration_s is not None and duration_s > 0:
+            snap["duration_s"] = float(duration_s)
+            snap["throughput_tok_s"] = self.tokens_generated / duration_s
+            snap["throughput_req_s"] = self.requests_completed / duration_s
+        return snap

@@ -1,0 +1,408 @@
+"""Continuous-batching scheduler with pattern-bucketed MC-dropout ensembles.
+
+The runtime core (DESIGN.md §7).  One ``step()`` is one scheduler iteration:
+
+1. **admit** — pop queued sequences (priority, then FCFS) into free cache
+   slots from the ``CachePool``;
+2. **prefill** — advance ONE pending prefill by at most ``prefill_chunk``
+   prompt tokens (``engine.prefill_extend``), so a long prompt never blocks
+   the decode batch for more than a chunk (chunked prefill interleaving);
+   archs without chunked-prefill support prefill whole-prompt in one step;
+3. **decode** — group all running sequences by their dropout-pattern bucket
+   ``(dp, b)`` and run one ``engine.decode_step_ragged`` per bucket.
+   Finished sequences are evicted and their slots freed at the end of the
+   same step (per-step join/evict).
+
+Paper tie-in: a request may ask for an MC-dropout ensemble of size E.  Each
+member samples a pattern ``(dp, b)`` from the request's ``PatternSchedule``
+(deterministic in (seed, member)), and members sharing a bucket decode in
+the same batch through ONE compiled executable — ``dp``/``b`` are static, so
+bucketing is what keeps the executable count bounded while members with
+``dp > 1`` run their FFNs through the compact RDP kernels at 1/dp FLOPs.
+
+Everything is synchronous and deterministic: same (seed, arrival trace) →
+same admission order → same buckets → same greedy token streams.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampler import PatternSchedule
+from repro.models.layers import NO_PATTERN, PatternArgs
+from repro.models.transformer import ModelConfig
+
+from . import engine
+from .cache_pool import CachePool
+from .metrics import Telemetry
+
+
+# --------------------------------------------------------------------------
+# requests & sequences
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One user request; ``ensemble > 1`` asks for MC-dropout uncertainty."""
+
+    rid: int
+    prompt: np.ndarray              # [S] int32 token ids
+    max_new_tokens: int = 16
+    priority: int = 0               # lower value = more urgent
+    ensemble: int = 1               # number of MC-dropout members
+    seed: int = 0                   # pattern sampling seed for this request
+    arrival_time: float = 0.0
+
+
+@dataclasses.dataclass
+class Sequence:
+    """One in-flight decode stream: a request, or one ensemble member."""
+
+    req: Request
+    member: int
+    dp: int = 1
+    bias: int = 0
+    state: str = "queued"           # queued | prefill | running | done
+    slot: Optional[int] = None
+    prefill_done: int = 0           # prompt tokens already processed
+    out_tokens: list = dataclasses.field(default_factory=list)
+    first_logits: Optional[np.ndarray] = None   # logits of the first token
+    t_submit: float = 0.0
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_last: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def bucket(self) -> tuple:
+        return (self.dp, self.bias)
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.req.prompt)
+
+    @property
+    def pos(self) -> int:
+        """Host-side mirror of the slot cache's position: the prompt plus
+        every decoded token except the one about to be fed back.  Tracked
+        here so the decode hot path never blocks on a device scalar."""
+        return self.prompt_len + len(self.out_tokens) - 1
+
+    @property
+    def finished(self) -> bool:
+        return len(self.out_tokens) >= self.req.max_new_tokens
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# --------------------------------------------------------------------------
+# scheduler
+# --------------------------------------------------------------------------
+
+class Scheduler:
+    """FCFS + priority continuous-batching scheduler over a cache pool."""
+
+    def __init__(self, cfg: ModelConfig, params, *, capacity: int = 8,
+                 max_len: int = 128, prefill_chunk: int = 16,
+                 max_queue: int = 64,
+                 schedule: Optional[PatternSchedule] = None,
+                 pattern_impl: str = "pallas",
+                 eos_token: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None,
+                 pad_buckets: bool = True):
+        if cfg.n_codebooks or cfg.vision_tokens:
+            raise ValueError(
+                f"{cfg.name}: modality-frontend archs (codebooks / vision) "
+                f"need per-request side inputs the runtime does not carry; "
+                f"serve them through the engine API directly")
+        self.cfg = cfg
+        self.params = params
+        self.pool = CachePool(cfg, capacity, max_len)
+        self._clock = None
+        self.max_len = max_len
+        self.prefill_chunk = prefill_chunk
+        self.max_queue = max_queue
+        self.schedule = schedule
+        self.pattern_impl = pattern_impl
+        self.eos_token = eos_token
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.pad_buckets = pad_buckets
+        self.chunked = engine.supports_chunked_prefill(cfg)
+
+        # priority -> FCFS deque of queued sequences
+        self._queues: dict[int, collections.deque] = {}
+        self._active: list[Sequence] = []       # admission order
+        self.completed: dict[int, list[dict]] = {}
+        self.last_buckets: dict[tuple, list[tuple]] = {}
+        self._fns: dict = {}                    # compiled-executable cache
+
+    # ------------------------------------------------------------------
+    # submission / state
+    # ------------------------------------------------------------------
+
+    @property
+    def queued_count(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    @property
+    def active_count(self) -> int:
+        return len(self._active)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._active) or self.queued_count > 0
+
+    def _pattern_for(self, req: Request, member: int) -> tuple:
+        """Deterministic (dp, bias) for one ensemble member.
+
+        Plain requests (ensemble=1, no schedule) run dense (dp=1).  With a
+        schedule, member m of request r draws sample step m from a
+        per-request reseeded schedule — pure in (req.seed, m)."""
+        if self.schedule is None or req.ensemble <= 1:
+            return 1, 0
+        sched = dataclasses.replace(self.schedule, seed=req.seed)
+        pat, b = sched.sample(member)
+        return pat.dp, b
+
+    def submit(self, req: Request, now: float = 0.0) -> bool:
+        """Queue a request (all its ensemble members).  Returns False and
+        queues nothing when admission control rejects it (backpressure:
+        the whole ensemble would overflow ``max_queue``)."""
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if len(req.prompt) < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+generation "
+                f"({len(req.prompt)}+{req.max_new_tokens}) exceeds "
+                f"max_len {self.max_len}")
+        if self.queued_count + req.ensemble > self.max_queue:
+            self.telemetry.requests_rejected += 1
+            return False
+        q = self._queues.setdefault(req.priority, collections.deque())
+        for m in range(req.ensemble):
+            dp, b = self._pattern_for(req, m)
+            q.append(Sequence(req=req, member=m, dp=dp, bias=b,
+                              t_submit=now))
+        return True
+
+    # ------------------------------------------------------------------
+    # one scheduler iteration
+    # ------------------------------------------------------------------
+
+    def step(self, now: float = 0.0, clock=None) -> dict:
+        """Admit → prefill one chunk → decode all buckets → evict.
+
+        ``clock`` (optional) is re-sampled AFTER each piece of compute so
+        wall-clock TTFT/TPOT include the work that produced the token;
+        without it all records use ``now`` (virtual clocks don't advance
+        mid-step, so replay determinism is unaffected)."""
+        self._clock = clock
+        admitted = self._admit(now)
+        prefill_tokens = self._prefill(now)
+        decoded = self._decode(now)
+        evicted = self._evict(now)
+        return {"admitted": admitted, "prefill_tokens": prefill_tokens,
+                "decoded": decoded, "evicted": evicted,
+                "active": self.active_count, "queued": self.queued_count}
+
+    def _now(self, fallback: float) -> float:
+        return self._clock.now() if self._clock is not None else fallback
+
+    # ------------------------------------------------------------------
+    def _admit(self, now: float) -> int:
+        admitted = 0
+        for prio in sorted(self._queues):
+            q = self._queues[prio]
+            while q and self.pool.free_count > 0:
+                seq = q.popleft()
+                seq.slot = self.pool.allocate()
+                seq.state = "prefill"
+                seq.t_admit = now
+                self.telemetry.queue_delay.record(now - seq.t_submit)
+                self._active.append(seq)
+                admitted += 1
+        return admitted
+
+    # ------------------------------------------------------------------
+    def _prefill(self, now: float) -> int:
+        """Advance the oldest pending prefill by one chunk."""
+        seq = next((s for s in self._active if s.state == "prefill"), None)
+        if seq is None:
+            return 0
+        pat = self._pat(seq)
+        remaining = seq.prompt_len - seq.prefill_done
+        if self.chunked:
+            take = min(self.prefill_chunk, remaining)
+            chunk = jnp.asarray(
+                seq.req.prompt[seq.prefill_done:seq.prefill_done + take],
+                jnp.int32)[None]
+            logits, cache = self._prefill_extend_fn(seq.bucket, take)(
+                self.params, self.pool.read(seq.slot), chunk)
+        else:
+            take = remaining
+            prompt = jnp.asarray(seq.req.prompt, jnp.int32)[None]
+            logits, cache = self._prefill_full_fn(seq.bucket,
+                                                  seq.prompt_len)(
+                self.params, prompt)
+        self.pool.write(seq.slot, cache)
+        seq.prefill_done += take
+        self.telemetry.prefill_chunks += 1
+        self.telemetry.prompt_tokens += take
+        if seq.prefill_done >= seq.prompt_len:
+            # prompt complete: the prefill logits yield the first token.
+            # Timestamp AFTER the compute (np.asarray blocks on the device)
+            # so wall-clock TTFT includes the prefill that produced it.
+            seq.first_logits = np.asarray(logits[0])
+            tok = self._next_token(seq, seq.first_logits)
+            t = self._now(now)
+            seq.out_tokens.append(tok)
+            seq.state = "running"
+            seq.t_first = seq.t_last = t
+            self.telemetry.ttft.record(t - seq.t_submit)
+            self.telemetry.record_decode_tokens(seq.dp, seq.bias, 1)
+        return take
+
+    # ------------------------------------------------------------------
+    def _decode(self, now: float) -> int:
+        running = [s for s in self._active
+                   if s.state == "running" and not s.finished]
+        if not running:
+            self.last_buckets = {}
+            return 0
+        buckets: dict[tuple, list[Sequence]] = {}
+        for s in running:                       # admission order inside
+            buckets.setdefault(s.bucket, []).append(s)
+        self.last_buckets = {k: [(s.req.rid, s.member) for s in v]
+                             for k, v in sorted(buckets.items())}
+
+        decoded = 0
+        for key in sorted(buckets):             # deterministic bucket order
+            seqs = buckets[key]
+            n = len(seqs)
+            width = _next_pow2(n) if self.pad_buckets else n
+            caches = [self.pool.read(s.slot) for s in seqs]
+            caches += [caches[0]] * (width - n)  # pad slots are discarded
+            layers = jax.tree.map(
+                lambda *a: jnp.concatenate(a, axis=1),
+                *[c["layers"] for c in caches])
+            pos = jnp.asarray([s.pos for s in seqs]
+                              + [seqs[0].pos] * (width - n), jnp.int32)
+            tokens = jnp.asarray(
+                [[s.out_tokens[-1]] for s in seqs]
+                + [[0]] * (width - n), jnp.int32)
+            logits, new = self._decode_fn(key)(
+                self.params, {"layers": layers, "pos": pos}, tokens)
+            logits = np.asarray(logits)           # blocks until compute done
+            t = self._now(now)
+            for i, s in enumerate(seqs):
+                self.pool.write(s.slot, {
+                    "layers": jax.tree.map(lambda a: a[:, i:i + 1],
+                                           new["layers"]),
+                    "pos": new["pos"][i]})
+                tok = self._next_token(s, logits[i])
+                s.out_tokens.append(tok)
+                self.telemetry.tpot.record(t - s.t_last)
+                s.t_last = t
+            self.telemetry.record_decode_tokens(key[0], key[1], n)
+            decoded += n
+        self.telemetry.decode_steps += 1
+        return decoded
+
+    # ------------------------------------------------------------------
+    def _evict(self, now: float) -> int:
+        evicted = 0
+        still_active = []
+        for s in self._active:
+            done = s.state == "running" and (
+                s.finished or (self.eos_token is not None
+                               and s.out_tokens
+                               and s.out_tokens[-1] == self.eos_token))
+            if not done:
+                still_active.append(s)
+                continue
+            s.state = "done"
+            s.t_done = now
+            self.pool.free(s.slot)
+            s.slot = None
+            self.telemetry.members_completed += 1
+            members = self.completed.setdefault(s.req.rid, [])
+            members.append({
+                "member": s.member, "dp": s.dp, "bias": s.bias,
+                "tokens": list(s.out_tokens),
+                "first_logits": s.first_logits,
+                "ffn_flop_fraction": 1.0 / s.dp,
+                "ttft": (s.t_first - s.t_submit
+                         if s.t_first is not None else None),
+            })
+            if len(members) == s.req.ensemble:
+                self.telemetry.requests_completed += 1
+            evicted += 1
+        self._active = still_active
+        return evicted
+
+    # ------------------------------------------------------------------
+    # sampling & compiled-fn caches
+    # ------------------------------------------------------------------
+
+    def _next_token(self, seq: Sequence, logits: np.ndarray) -> int:
+        """Greedy decode — deterministic, which is what makes (seed, trace)
+        replay produce identical streams."""
+        return int(np.argmax(logits, -1))
+
+    def _pat(self, seq: Sequence) -> PatternArgs:
+        if seq.dp <= 1:
+            return NO_PATTERN
+        return PatternArgs(dp=seq.dp, bias=seq.bias,
+                           kind=self.cfg.pattern_kind,
+                           nb=self.cfg.pattern_nb, impl=self.pattern_impl)
+
+    def _bucket_pat(self, bucket: tuple) -> PatternArgs:
+        dp, b = bucket
+        if dp <= 1:
+            return NO_PATTERN
+        return PatternArgs(dp=dp, bias=b, kind=self.cfg.pattern_kind,
+                           nb=self.cfg.pattern_nb, impl=self.pattern_impl)
+
+    def _decode_fn(self, bucket: tuple):
+        key = ("decode", bucket)
+        if key not in self._fns:
+            pat = self._bucket_pat(bucket)
+            self._fns[key] = jax.jit(functools.partial(
+                engine.decode_step_ragged, self.cfg, pat=pat))
+        return self._fns[key]
+
+    def _prefill_extend_fn(self, bucket: tuple, chunk_len: int):
+        # chunk_len is static; all full-size chunks share one executable,
+        # each distinct remainder length compiles once
+        key = ("prefill_extend", bucket, chunk_len)
+        if key not in self._fns:
+            pat = self._bucket_pat(bucket)
+            self._fns[key] = jax.jit(functools.partial(
+                engine.prefill_extend, self.cfg, pat=pat))
+        return self._fns[key]
+
+    def _prefill_full_fn(self, bucket: tuple, prompt_len: int):
+        key = ("prefill_full", bucket, prompt_len)
+        if key not in self._fns:
+            pat = self._bucket_pat(bucket)
+            cfg, max_len = self.cfg, self.max_len
+
+            def fn(params, prompt, _pat=pat):
+                return engine.prefill(cfg, params, prompt, max_len,
+                                      pat=_pat)
+
+            self._fns[key] = jax.jit(fn)
+        return self._fns[key]

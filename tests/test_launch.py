@@ -50,8 +50,9 @@ def test_launcher_end_to_end_smoke():
         [sys.executable, "-m", "repro.launch.train", "--arch", "qwen2-1.5b",
          "--smoke", "--steps", "4", "--batch", "2", "--seq", "32",
          "--dropout", "0.5"],
-        capture_output=True, text=True, env={"PYTHONPATH": "src",
-                                             "PATH": "/usr/bin:/bin:/usr/local/bin"})
+        capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, r.stderr[-2000:]
     assert "final loss" in r.stdout
 

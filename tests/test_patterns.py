@@ -1,7 +1,7 @@
 """Property tests for the pattern algebra (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hyp import given, settings, strategies as st
 
 from repro.core import patterns as P
 

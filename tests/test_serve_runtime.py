@@ -1,0 +1,361 @@
+"""Continuous-batching runtime tests: cache-pool invariants, scheduler
+fairness, pattern-bucketed MC-dropout ensembles, deterministic replay, and
+the engine primitives they build on (ragged decode, chunked prefill,
+pattern plumbing)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.sampler import PatternSchedule
+from repro.models import init_lm, materialize
+from repro.models.layers import NO_PATTERN, PatternArgs
+from repro.models.transformer import forward
+from repro import serve
+from repro.serve import engine
+from repro.serve.cache_pool import CachePool, CachePoolError
+
+ARCH = "qwen2_1_5b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke(ARCH)
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    return cfg, params
+
+
+def _prompt(rng, n):
+    return rng.integers(0, 500, n).astype(np.int32)
+
+
+def _dp2_schedule():
+    """Degenerate schedule: every ensemble member draws dp=2."""
+    return PatternSchedule(kind="rdp", dist=np.array([0.0, 1.0]), block=32)
+
+
+# ==========================================================================
+# cache pool
+# ==========================================================================
+
+def test_cache_pool_allocate_free_reuse(setup):
+    cfg, _ = setup
+    pool = CachePool(cfg, capacity=3, max_len=16)
+    slots = [pool.allocate() for _ in range(3)]
+    assert sorted(slots) == [0, 1, 2]
+    assert pool.allocate() is None            # exhausted, not an exception
+    assert pool.stats.failed == 1
+    pool.free(slots[1])
+    assert pool.allocate() == slots[1]        # LIFO recycling
+    assert pool.stats.allocated == 4
+    assert pool.stats.high_water == 3
+
+
+def test_cache_pool_invariants(setup):
+    cfg, _ = setup
+    pool = CachePool(cfg, capacity=2, max_len=16)
+    s = pool.allocate()
+    pool.free(s)
+    with pytest.raises(CachePoolError):
+        pool.free(s)                          # double free
+    with pytest.raises(CachePoolError):
+        pool.read(s)                          # use after free
+    with pytest.raises(CachePoolError):
+        pool.write(s, None)
+    with pytest.raises(CachePoolError):
+        pool.free(99)                         # foreign slot
+
+
+def test_cache_pool_free_resets_to_zero_template(setup):
+    cfg, params = setup
+    pool = CachePool(cfg, capacity=1, max_len=16)
+    slot = pool.allocate()
+    toks = jnp.asarray(np.arange(8)[None], jnp.int32)
+    _, cache = engine.prefill(cfg, params, toks, 16)
+    pool.write(slot, cache)
+    assert int(pool.read(slot)["pos"]) == 8
+    pool.free(slot)
+    slot2 = pool.allocate()
+    c = pool.read(slot2)
+    assert int(c["pos"]) == 0
+    assert all(float(jnp.abs(leaf).sum()) == 0.0
+               for leaf in jax.tree.leaves(c["layers"]))
+
+
+# ==========================================================================
+# engine primitives
+# ==========================================================================
+
+def test_prefill_applies_pattern(setup):
+    """Regression: prefill accepted ``pat`` but silently ignored it."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    pa = PatternArgs(dp=2, bias=1, kind="rdp", nb=cfg.pattern_nb)
+    logits_pat, _ = engine.prefill(cfg, params, toks, 16, pat=pa)
+    logits_fwd, _ = forward(cfg, params, toks, pa)
+    np.testing.assert_allclose(np.asarray(logits_pat),
+                               np.asarray(logits_fwd[:, -1]),
+                               rtol=3e-2, atol=3e-2)
+    logits_plain, _ = engine.prefill(cfg, params, toks, 16)
+    assert not np.allclose(np.asarray(logits_pat),
+                           np.asarray(logits_plain)), \
+        "pattern had no effect on prefill"
+
+
+def test_ragged_decode_matches_scalar_decode(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 14)), jnp.int32)
+    _, c0 = engine.prefill(cfg, params, toks[:1, :9], 20)
+    _, c1 = engine.prefill(cfg, params, toks[1:, :14], 20)
+    layers = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 1),
+                          c0["layers"], c1["layers"])
+    cache = {"layers": layers, "pos": jnp.asarray([9, 14], jnp.int32)}
+    step = jnp.asarray([[3], [7]], jnp.int32)
+    lr, new = engine.decode_step_ragged(cfg, params, cache, step)
+    l0, _ = engine.decode_step(cfg, params, c0, step[:1])
+    l1, _ = engine.decode_step(cfg, params, c1, step[1:])
+    np.testing.assert_allclose(np.asarray(lr[0]), np.asarray(l0[0]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lr[1]), np.asarray(l1[0]),
+                               rtol=1e-4, atol=1e-4)
+    assert new["pos"].tolist() == [10, 15]
+
+
+def test_chunked_prefill_matches_single_shot(setup):
+    cfg, params = setup
+    assert engine.supports_chunked_prefill(cfg)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    pa = PatternArgs(dp=2, bias=0, kind="rdp", nb=cfg.pattern_nb)
+    for pat in (NO_PATTERN, pa):
+        cache = engine.init_cache(cfg, 1, 16)[0]
+        for s in range(0, 12, 5):             # uneven chunks: 5, 5, 2
+            logits, cache = engine.prefill_extend(
+                cfg, params, cache, toks[:, s:s + 5], pat=pat)
+        want, _ = engine.prefill(cfg, params, toks, 16, pat=pat)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
+        assert int(cache["pos"]) == 12
+
+
+def test_chunked_prefill_gating():
+    gemma = get_smoke("gemma3_1b")              # sliding window -> ring cache
+    assert not engine.supports_chunked_prefill(gemma)
+    mamba = get_smoke("mamba2_1_3b")
+    assert not engine.supports_chunked_prefill(mamba)
+
+
+def test_ffn_pallas_impl_matches_slice(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 10)), jnp.int32)
+    base = dict(dp=2, bias=1, kind="rdp", nb=cfg.pattern_nb)
+    l_slice, _ = engine.prefill(cfg, params, toks, 12,
+                                pat=PatternArgs(**base, impl="slice"))
+    l_pallas, _ = engine.prefill(cfg, params, toks, 12,
+                                 pat=PatternArgs(**base, impl="pallas"))
+    np.testing.assert_allclose(np.asarray(l_pallas), np.asarray(l_slice),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pattern_ffn_flop_reduction(setup):
+    """A dp=2 member's FFN executes ~1/2 the dense FLOPs (compact matmuls,
+    not masking) — measured from XLA's compiled cost analysis."""
+    cfg, params = setup
+    from repro.models import layers as L
+    ffn = params["stacks"][0]["ffn"]
+    lp = jax.tree.map(lambda a: a[0], ffn)      # one layer's FFN params
+    x = jnp.ones((4, 8, cfg.d_model), cfg.jdtype)
+
+    def flops(pat):
+        f = jax.jit(lambda p, x: L.ffn_block(p, x, pat))
+        cost = f.lower(lp, x).compile().cost_analysis()
+        cost = cost[0] if isinstance(cost, list) else cost
+        return float(cost["flops"])
+
+    dense = flops(NO_PATTERN)
+    compact = flops(PatternArgs(dp=2, bias=0, kind="rdp",
+                                nb=cfg.pattern_nb))
+    ratio = compact / dense
+    assert 0.4 < ratio < 0.62, (dense, compact, ratio)
+
+
+# ==========================================================================
+# scheduler: buckets, fairness, backpressure
+# ==========================================================================
+
+def test_ensemble_bucket_grouping(setup):
+    """Members sharing a sampled (dp, b) decode in ONE batch; dp=2 members
+    run the compact RDP kernel path and record 1/2 FLOP fraction."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    sched = serve.Scheduler(cfg, params, capacity=6, max_len=24,
+                            schedule=_dp2_schedule(),
+                            pattern_impl="pallas")
+    req = serve.Request(rid=0, prompt=_prompt(rng, 8), max_new_tokens=8,
+                        ensemble=4, seed=11)
+    assert sched.submit(req)
+    sched.step(0.0)                             # admit + first chunk
+    while any(s.state != "running" for s in sched._active):
+        sched.step(0.0)
+    sched.step(0.0)                             # a pure decode step
+    buckets = sched.last_buckets
+    assert buckets, "no decode buckets formed"
+    # dp=2 for every member; both biases exist, grouped not per-member
+    assert all(dp == 2 for dp, _ in buckets)
+    assert sum(len(v) for v in buckets.values()) == 4
+    assert len(buckets) < 4, f"members not grouped: {buckets}"
+
+    out = serve.Server(sched).run([])           # drain the rest
+    members = out["results"][0]
+    assert len(members) == 4
+    for m in members:
+        assert m["dp"] == 2
+        assert m["ffn_flop_fraction"] == 0.5    # per-member FLOP reduction
+    telem = out["telemetry"]
+    assert telem["mean_ffn_flop_fraction"] == pytest.approx(0.5)
+    assert all(k.startswith("dp=2") for k in telem["bucket_tokens"])
+
+
+def test_scheduler_no_starvation_mixed_load(setup):
+    """Mixed prefill/decode load on a tight pool: every request completes
+    and admission follows FCFS within a priority level."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    sched = serve.Scheduler(cfg, params, capacity=2, max_len=32,
+                            prefill_chunk=4)
+    trace = [serve.Request(rid=i, prompt=_prompt(rng, 6 + 3 * (i % 3)),
+                           max_new_tokens=3, arrival_time=0.0)
+             for i in range(6)]
+    out = serve.Server(sched).run(trace)
+    assert sorted(out["results"]) == list(range(6))
+    assert all(len(ms[0]["tokens"]) == 3 for ms in out["results"].values())
+    # FCFS: time-to-first-token ordered by rid (same priority, same arrival)
+    ttfts = [out["results"][i][0]["ttft"] for i in range(6)]
+    assert ttfts == sorted(ttfts), ttfts
+
+
+def test_priority_admission(setup):
+    """With one slot, a later-submitted high-priority request is admitted
+    before earlier low-priority ones once a slot frees."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    sched = serve.Scheduler(cfg, params, capacity=1, max_len=24)
+    reqs = [serve.Request(rid=0, prompt=_prompt(rng, 6), max_new_tokens=2,
+                          priority=1),
+            serve.Request(rid=1, prompt=_prompt(rng, 6), max_new_tokens=2,
+                          priority=1),
+            serve.Request(rid=2, prompt=_prompt(rng, 6), max_new_tokens=2,
+                          priority=0)]
+    for r in reqs:
+        sched.submit(r, 0.0)
+    out = serve.Server(sched).run([])
+    ttft = {rid: ms[0]["ttft"] for rid, ms in out["results"].items()}
+    # priority 0 (rid2) takes the slot first; then FCFS among priority 1
+    assert ttft[2] < ttft[0] < ttft[1]
+
+
+def test_admission_control_backpressure(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    sched = serve.Scheduler(cfg, params, capacity=1, max_len=24,
+                            max_queue=2)
+    ok = [sched.submit(serve.Request(rid=i, prompt=_prompt(rng, 6),
+                                     max_new_tokens=2), 0.0)
+          for i in range(4)]
+    assert ok == [True, True, False, False]
+    assert sched.telemetry.requests_rejected == 2
+    # an over-long request is an error, not a queue entry
+    with pytest.raises(ValueError):
+        sched.submit(serve.Request(rid=9, prompt=_prompt(rng, 30),
+                                   max_new_tokens=8), 0.0)
+
+
+def test_modality_archs_rejected_up_front():
+    """Codebook/vision archs need side inputs the runtime doesn't carry —
+    the scheduler must say so at construction, not crash inside a trace."""
+    cfg = get_smoke("musicgen_large")
+    with pytest.raises(ValueError, match="modality"):
+        serve.Scheduler(cfg, None, capacity=1, max_len=8)
+
+
+def test_slots_recycled_across_requests(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    sched = serve.Scheduler(cfg, params, capacity=2, max_len=24)
+    trace = [serve.Request(rid=i, prompt=_prompt(rng, 6), max_new_tokens=2,
+                           arrival_time=0.0) for i in range(5)]
+    serve.Server(sched).run(trace)
+    assert sched.pool.stats.allocated == 5      # 5 requests through 2 slots
+    assert sched.pool.stats.freed == 5
+    assert sched.pool.stats.high_water == 2
+    assert sched.pool.free_count == 2
+
+
+# ==========================================================================
+# deterministic trace replay
+# ==========================================================================
+
+def _replay_once(cfg, params, seed):
+    schedule = PatternSchedule(kind="rdp",
+                               dist=np.array([0.5, 0.3, 0.0, 0.2]),
+                               block=32, seed=0)
+    sched = serve.Scheduler(cfg, params, capacity=3, max_len=32,
+                            prefill_chunk=5, schedule=schedule)
+    trace = serve.poisson_trace(rate=100.0, n_requests=5, seed=seed,
+                                prompt_len=(5, 10), max_new=(2, 4),
+                                vocab=cfg.vocab, ensemble=3,
+                                ensemble_prob=0.6)
+    out = serve.Server(sched, clock=serve.VirtualClock()).run(trace)
+    return {rid: [(m["member"], m["dp"], m["bias"], tuple(m["tokens"]))
+                  for m in ms]
+            for rid, ms in out["results"].items()}
+
+
+def test_deterministic_trace_replay(setup):
+    """Identical (seed, arrival trace) → identical member patterns and
+    identical greedy token streams, across fresh scheduler instances."""
+    cfg, params = setup
+    a = _replay_once(cfg, params, seed=13)
+    b = _replay_once(cfg, params, seed=13)
+    assert a == b
+    c = _replay_once(cfg, params, seed=14)      # different trace differs
+    assert c != a
+
+
+# ==========================================================================
+# end-to-end bench entry point
+# ==========================================================================
+
+def test_serve_bench_end_to_end(setup, tmp_path):
+    """benchmarks/serve_bench.py runs on CPU and emits a complete
+    BENCH_serve.json (acceptance criterion)."""
+    import json
+    from benchmarks.serve_bench import main
+    import sys
+    out = tmp_path / "BENCH_serve.json"
+    argv = ["serve_bench.py", "--n-requests", "3", "--capacity", "2",
+            "--ensemble", "2", "--ensemble-prob", "1.0",
+            "--prompt-min", "5", "--prompt-max", "8",
+            "--gen-min", "2", "--gen-max", "3", "--dp-max", "2",
+            "--drop-rate", "0.4", "--out", str(out)]
+    old = sys.argv
+    try:
+        sys.argv = argv
+        main()
+    finally:
+        sys.argv = old
+    result = json.loads(out.read_text())
+    t = result["telemetry"]
+    assert t["requests_completed"] == 3
+    assert t["tokens_generated"] > 0
+    assert "throughput_tok_s" in t
+    for hist in ("ttft", "tpot", "queue_delay"):
+        assert t[hist]["count"] > 0
+    assert 0.0 < t["mean_ffn_flop_fraction"] <= 1.0
+    assert result["config"]["pattern_impl"] == "pallas"

@@ -12,8 +12,14 @@ def run_in_devices(n: int, code: str):
         f"os.environ['XLA_FLAGS'] = "
         f"'--xla_force_host_platform_device_count={n}'\n"
         + textwrap.dedent(code))
+    # JAX_PLATFORMS=cpu: the child is a host-platform simulation; without it
+    # jax probes any installed accelerator plugin first (on TPU-less boxes
+    # with libtpu present that is ~minutes of metadata-fetch retries)
     r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"})
+                       text=True,
+                       env={"PYTHONPATH": "src",
+                            "PATH": "/usr/bin:/bin:/usr/local/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
     return r.stdout
 
