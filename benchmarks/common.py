@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sampler import PatternSchedule, build_schedule
+from repro.core.plan import build_plan
 from repro.models import paper as PM
 
 
@@ -80,8 +80,8 @@ def train_mlp(mode: str, rates: tuple[float, float], sizes, data,
             while (n - 1) / n < min(r + 0.15, 0.93) and n < dp_max:
                 n *= 2
             return n
-        scheds = [build_schedule(mode, r, n_units_blocks=min(s, 32),
-                                 dp_max=n_for(r), block=1, seed=seed + i)
+        scheds = [build_plan(mode, r, nb=min(s, 32),
+                             dp_max=n_for(r), block=1, seed=seed + i)
                   for i, (r, s) in enumerate(zip(rates, sizes[1:-1]))]
 
     def loss_bernoulli(p, x, y, rng):
@@ -143,9 +143,9 @@ def train_mlp(mode: str, rates: tuple[float, float], sizes, data,
         elif mode == "none":
             g = grad_none(params, x, y)
         else:
-            pats = [s.sample(step) for s in scheds]
-            dps = tuple(pat.dp for pat, _ in pats)
-            biases = tuple(b for _, b in pats)
+            bounds = [s.sample(step) for s in scheds]
+            dps = tuple(b.dp for b in bounds)
+            biases = tuple(b.bias for b in bounds)
             g = grad_pattern(params, x, y, dps, biases)
         params, vel = sgd(params, vel, g)
         jax.block_until_ready(jax.tree.leaves(params)[0])
@@ -178,9 +178,9 @@ def train_lstm(mode: str, rates: tuple[float, float], tokens,
             while (n - 1) / n < min(r + 0.15, 0.93) and n < 8:
                 n *= 2
             return n
-        scheds = [build_schedule("rdp", r, n_units_blocks=30,
-                                 dp_max=min(n_for(r), 6),
-                                 block=d_hid // 30, seed=seed + i)
+        scheds = [build_plan("rdp", r, nb=30,
+                             dp_max=min(n_for(r), 6),
+                             block=d_hid // 30, seed=seed + i)
                   for i, r in enumerate(rates)]
 
     def loss_bern(p, x, y, rng):
@@ -225,9 +225,9 @@ def train_lstm(mode: str, rates: tuple[float, float], tokens,
         elif mode == "none":
             l, g = grad_none(params, x, y)
         else:
-            pats = [s.sample(step) for s in scheds]
-            dps = tuple(pat.dp for pat, _ in pats)
-            biases = tuple(bb for _, bb in pats)
+            bounds = [s.sample(step) for s in scheds]
+            dps = tuple(b.dp for b in bounds)
+            biases = tuple(b.bias for b in bounds)
             l, g = grad_pattern(params, x, y, dps, biases)
         params = sgd_clip(params, g, lr_now)
         jax.block_until_ready(jax.tree.leaves(params)[0])

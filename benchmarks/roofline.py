@@ -13,7 +13,7 @@ import json
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config
-from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.hlo_analysis import PEAK_FLOPS_BF16
 
 from .common import emit
 

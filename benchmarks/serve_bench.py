@@ -4,7 +4,7 @@ throughput + pattern-bucket accounting).
 
 Runs end-to-end on CPU: the MC-dropout ensemble members with ``dp > 1``
 execute their FFNs through the compact RDP Pallas kernels in interpret
-mode (``PatternArgs.impl="pallas"``), so the benchmark exercises the exact
+mode (``DropoutPlan(backend="pallas")``), so the benchmark exercises the exact
 serving-time kernel path the paper's technique accelerates.
 
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--arch qwen2-1-5b]
@@ -19,7 +19,7 @@ from pathlib import Path
 import jax
 
 from repro.configs import get_smoke, normalize
-from repro.core.sampler import build_schedule
+from repro.core.plan import build_plan
 from repro.models import init_lm, materialize
 from repro import serve
 
@@ -28,15 +28,15 @@ def run_bench(args) -> dict:
     cfg = get_smoke(normalize(args.arch))
     params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
 
-    schedule = build_schedule(
-        cfg.pattern_kind, args.drop_rate, n_units_blocks=cfg.pattern_nb,
+    plan = build_plan(
+        cfg.pattern_kind, args.drop_rate, nb=cfg.pattern_nb,
         dp_max=args.dp_max, block=cfg.d_ff // cfg.pattern_nb,
-        seed=args.seed)
+        backend=args.impl, seed=args.seed)
 
     scheduler = serve.Scheduler(
         cfg, params, capacity=args.capacity, max_len=args.max_len,
         prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
-        schedule=schedule, pattern_impl=args.impl)
+        plan=plan)
     trace = serve.poisson_trace(
         rate=args.rate, n_requests=args.n_requests, seed=args.seed,
         prompt_len=(args.prompt_min, args.prompt_max),
@@ -71,7 +71,8 @@ def run_bench(args) -> dict:
             "ensemble_prob": args.ensemble_prob,
             "drop_rate": args.drop_rate, "dp_max": args.dp_max,
             "pattern_impl": args.impl, "seed": args.seed,
-            "schedule_support_dp": schedule.support(),
+            "schedule_support_dp": plan.support(),
+            "plan_buckets": scheduler.possible_buckets(),
         },
         "wall_s": wall,
         "telemetry": telemetry,

@@ -16,7 +16,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke
-from repro.core.sampler import build_schedule
+from repro.core.plan import build_plan
 from repro.models import init_lm, materialize
 from repro import serve
 
@@ -26,11 +26,13 @@ params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
 rng = np.random.default_rng(0)
 prompt = rng.integers(0, cfg.vocab, 24).astype(np.int32)
 
-schedule = build_schedule("rdp", 0.3, n_units_blocks=cfg.pattern_nb,
-                          dp_max=4, block=cfg.d_ff // cfg.pattern_nb)
+# one DropoutPlan drives both ensemble sampling and kernel dispatch: the
+# "pallas" backend routes member FFNs through the compact RDP kernels
+plan = build_plan("rdp", 0.3, nb=cfg.pattern_nb, dp_max=4,
+                  block=cfg.d_ff // cfg.pattern_nb, backend="pallas")
+print(f"plan buckets (dp, b): {plan.buckets()}")
 
-scheduler = serve.Scheduler(cfg, params, capacity=E, max_len=32,
-                            schedule=schedule, pattern_impl="pallas")
+scheduler = serve.Scheduler(cfg, params, capacity=E, max_len=32, plan=plan)
 server = serve.Server(scheduler, clock=serve.WallClock())
 
 # deterministic baseline: same prompt, ensemble of 1 (dp=1 dense)

@@ -1,6 +1,8 @@
 """Quickstart: the paper's technique end-to-end in 5 minutes on CPU.
 
-1. Search a dropout-pattern distribution K for target rate p (Algorithm 1).
+1. Build a ``DropoutPlan`` for target rate p — Algorithm 1 searches the
+   pattern distribution K; the plan owns the family ("rdp"), the execution
+   backend ("slice") and the per-layer bias policy (DESIGN.md §8).
 2. Verify the statistical equivalence claim (Eq. 2-3).
 3. Train a small LM with Approximate Random Dropout vs conventional
    dropout and compare loss + per-step matmul FLOPs.
@@ -8,12 +10,11 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke
 from repro.core.equivalence import check_equivalence
-from repro.core.sampler import build_schedule, identity_schedule
+from repro.core.plan import FAMILIES, build_plan, identity_plan
 from repro.data.pipeline import SyntheticLMData
 from repro.models import init_lm, materialize
 from repro.optim.optimizers import AdamW
@@ -21,15 +22,22 @@ from repro.train.loop import Trainer, TrainerConfig
 
 TARGET_RATE = 0.5
 
-# -- 1. Algorithm 1: search the pattern distribution ------------------------
-sched = build_schedule("rdp", TARGET_RATE, n_units_blocks=8, dp_max=8,
-                       block=16, seed=0)
-print(f"searched K over dp=1..8: {np.round(sched.dist, 3)}")
-print(f"  support (compiled buckets): {sched.support()}")
-print(f"  expected FLOP fraction:     {sched.expected_flop_fraction():.3f}")
+# -- 1. one DropoutPlan = family + searched K + backend + bias policy --------
+plan = build_plan("rdp", TARGET_RATE, nb=8, dp_max=8, block=16,
+                  backend="slice", bias_policy="layer_offset", seed=0)
+print(f"registered pattern families: {sorted(FAMILIES)}")
+print(f"searched K over dp=1..8: {np.round(plan.dist, 3)}")
+print(f"  support (dp values):        {plan.support()}")
+print(f"  executable buckets (dp, b): {plan.buckets()}")
+print(f"  expected FLOP fraction:     {plan.expected_flop_fraction():.3f}")
+
+# one concrete draw — what a train step / ensemble member actually binds
+bound = plan.sample(step=0)
+print(f"  step-0 draw: dp={bound.dp} bias={bound.bias} "
+      f"(bucket {bound.bucket}, {bound.flop_fraction:.2f}x dense FLOPs)")
 
 # -- 2. statistical equivalence (the paper's Eq. 2-3 'proof') ----------------
-report = check_equivalence(sched, dim=128, target=TARGET_RATE, steps=2000)
+report = check_equivalence(plan, dim=128, target=TARGET_RATE, steps=2000)
 print(f"equivalence: global rate {report['global_rate']:.3f} "
       f"(target {TARGET_RATE}), per-unit marginal uniform, "
       f"MC max err {report['mc_max_err']:.4f}")
@@ -38,10 +46,9 @@ print(f"equivalence: global rate {report['global_rate']:.3f} "
 cfg = get_smoke("qwen2_1_5b")
 data = SyntheticLMData(vocab=cfg.vocab, seq_len=64, global_batch=4)
 
-for name, schedule in [("approx-dropout", sched),
-                       ("no-dropout", identity_schedule())]:
+for name, p in [("approx-dropout", plan), ("no-dropout", identity_plan())]:
     params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
-    trainer = Trainer(cfg, AdamW(), params, schedule=schedule,
+    trainer = Trainer(cfg, AdamW(), params, plan=p,
                       tcfg=TrainerConfig(steps=30, base_lr=1e-3,
                                          log_every=10))
     hist = trainer.run(data.batch)

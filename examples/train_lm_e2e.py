@@ -10,13 +10,12 @@ This is the CPU-scale version of the launcher
 config-registry path; this example builds a custom ~100M model directly).
 """
 import argparse
-import dataclasses
 import time
 
 import jax
+import numpy as np
 
-from repro.configs import get_smoke
-from repro.core.sampler import build_schedule, identity_schedule
+from repro.core.plan import build_plan, identity_plan
 from repro.data.pipeline import SyntheticLMData
 from repro.models import init_lm, materialize
 from repro.models.transformer import ModelConfig
@@ -47,18 +46,18 @@ def main():
           f"{args.layers}L x {args.dim}d, vocab 32768")
 
     if args.dropout > 0:
-        sched = build_schedule(args.pattern, args.dropout,
-                               n_units_blocks=32, dp_max=8,
-                               block=cfg.pattern_nb)
-        print(f"pattern distribution K: {sched.dist.round(3)} "
-              f"(E[FLOP fraction]={sched.expected_flop_fraction():.3f})")
+        plan = build_plan(args.pattern, args.dropout, nb=32, dp_max=8,
+                          block=cfg.pattern_nb)
+        print(f"pattern distribution K: {np.round(plan.dist, 3)} "
+              f"(E[FLOP fraction]={plan.expected_flop_fraction():.3f}; "
+              f"buckets={len(plan.buckets())})")
     else:
-        sched = identity_schedule()
+        plan = identity_plan()
 
     data = SyntheticLMData(vocab=cfg.vocab, seq_len=args.seq,
                            global_batch=args.batch)
     trainer = Trainer(
-        cfg, AdamW(), params, schedule=sched,
+        cfg, AdamW(), params, plan=plan,
         tcfg=TrainerConfig(steps=args.steps, base_lr=3e-4, warmup=20,
                            ckpt_every=50, ckpt_dir=args.ckpt_dir,
                            log_every=20))

@@ -1,19 +1,29 @@
 """Approximate Random Dropout — the paper's core contribution.
 
 Public API:
+  plan        — DropoutPlan / BoundPlan + the family/backend/bias-policy
+                registries (the canonical configuration surface, DESIGN.md §8)
   patterns    — RDP/TDP pattern algebra (keep indices, masks, compact shapes)
   search      — Algorithm 1: SGD-based search for the pattern distribution K
-  sampler     — per-step (dp, b) sampling, pattern bucketing
+  sampler     — DEPRECATED shims (PatternSchedule / build_schedule) over plan
   dropout     — Bernoulli baseline + compact RDP/TDP application
   equivalence — statistical-equivalence verifier (Eq. 2-3)
+  colrdp      — column-RDP demo family (registry extensibility proof)
 """
-from . import dropout, equivalence, patterns, sampler, search
+from . import dropout, equivalence, patterns, plan, sampler, search
 from .patterns import Pattern
+from .plan import (BACKENDS, FAMILIES, BoundPlan, DropoutPlan, LayerOverride,
+                   as_bound, build_plan, get_family, identity_plan,
+                   register_backend, register_bias_policy, register_family)
 from .sampler import PatternSchedule, build_schedule, identity_schedule
 from .search import SearchConfig, search_distribution
 
 __all__ = [
-    "patterns", "search", "sampler", "dropout", "equivalence",
-    "Pattern", "PatternSchedule", "build_schedule", "identity_schedule",
+    "patterns", "plan", "search", "sampler", "dropout", "equivalence",
+    "Pattern", "BoundPlan", "DropoutPlan", "LayerOverride",
+    "BACKENDS", "FAMILIES",
+    "as_bound", "build_plan", "get_family", "identity_plan",
+    "register_backend", "register_bias_policy", "register_family",
+    "PatternSchedule", "build_schedule", "identity_schedule",
     "SearchConfig", "search_distribution",
 ]

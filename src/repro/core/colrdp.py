@@ -1,0 +1,58 @@
+"""Column-structured RDP — the registry's extensibility proof.
+
+``col_rdp`` drops *input*-dimension units of the FFN instead of hidden
+neurons: for the up/gate projections ``w [d_in, d_ff]``, whole input
+column-blocks are dropped, so the kept rows of ``w_up``/``w_gate`` and the
+matching features of ``x`` form compact matrices at 1/dp the up/gate FLOPs
+(the down projection stays dense — its input dim is the *hidden* dim, which
+this family does not touch).  This is the structured analogue of input
+dropout, and the GPGPU-friendly "sensitivity-aware column" direction of
+Song et al. (2022) — see PAPERS.md.
+
+Semantics (mask-multiply oracle): ``y = act((x·m·dp) @ w_up) ⊙
+((x·m·dp) @ w_gate) @ w_down`` with ``m`` the RDP keep-mask over d_in —
+inverted-dropout ×dp scale on the kept inputs, applied before the
+activation.
+
+The point of this module: registering a new family requires *no* edits to
+layers, the train loop, the serve scheduler or the benchmarks — only the
+``@register_family`` decorator below and one import in ``core/plan.py``.
+"""
+from __future__ import annotations
+
+
+from . import patterns as P
+from .plan import (PatternFamily, _gather_blocks, _slice_blocks, constrain,
+                   register_family)
+
+
+@register_family
+class ColRdpFamily(PatternFamily):
+    """RDP over the FFN *input* dimension (column-structured)."""
+
+    name = "col_rdp"
+    # no compact-DMA kernel exists for input-dim slicing yet, so requesting
+    # "pallas" raises at construction instead of silently running XLA
+    backends = ("slice", "gather")
+
+    def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
+                  act):
+        take = _gather_blocks if backend == "gather" else _slice_blocks
+        xc = take(x, x.ndim - 1, nb, dp, bias)          # [..., d_in/dp]
+        w_up_c = take(w_up, 0, nb, dp, bias)            # [d_in/dp, d_ff]
+        h = (xc @ w_up_c) * dp                          # inverted-dropout
+        h = constrain(h, ("batch", "seq", "ffn"))
+        if w_gate is not None:
+            w_gate_c = take(w_gate, 0, nb, dp, bias)
+            h = act(h) * ((xc @ w_gate_c) * dp)
+        else:
+            h = act(h)
+        return h @ w_down
+
+    def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        block = w_up.shape[0] // nb
+        mask = P.rdp_mask(w_up.shape[0], dp, bias, block, x.dtype)
+        xm = x * mask * dp
+        h = xm @ w_up
+        h = act(h) * (xm @ w_gate) if w_gate is not None else act(h)
+        return h @ w_down

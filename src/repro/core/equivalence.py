@@ -10,16 +10,24 @@ This module verifies the claim two ways:
 * **exactly** — for each unit position, sum over (dp, b) of
   P(dp)·P(b)·[unit dropped under (dp, b)]; asserts the marginal is *uniform*
   across positions and equals p_g.
-* **Monte-Carlo** — drive the real ``PatternSchedule`` for T steps and count
-  empirical per-unit drop frequencies (this also exercises the sampler's
-  determinism path).
+* **Monte-Carlo** — drive the real sampler (a ``DropoutPlan`` or the legacy
+  ``PatternSchedule`` shim) for T steps and count empirical per-unit drop
+  frequencies (this also exercises the sampler's determinism path).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .patterns import np_kept_indices
-from .sampler import PatternSchedule
+
+
+def _draw(sched, step: int) -> tuple[int, int]:
+    """(dp, bias) for one step from either a DropoutPlan or a legacy
+    PatternSchedule."""
+    s = sched.sample(step)
+    if isinstance(s, tuple):             # legacy: (Pattern, bias)
+        return s[0].dp, s[1]
+    return s.dp, s.bias                  # BoundPlan
 
 
 def exact_unit_drop_marginals(dist: np.ndarray, dim: int, block: int = 1
@@ -47,25 +55,28 @@ def exact_unit_drop_marginals(dist: np.ndarray, dim: int, block: int = 1
     return drop
 
 
-def empirical_unit_drop_marginals(sched: PatternSchedule, dim: int,
+def empirical_unit_drop_marginals(sched, dim: int,
                                   steps: int = 4000) -> np.ndarray:
-    """Monte-Carlo per-unit drop frequency over ``steps`` sampled patterns."""
+    """Monte-Carlo per-unit drop frequency over ``steps`` sampled patterns.
+    ``sched``: a DropoutPlan or legacy PatternSchedule."""
     counts = np.zeros(dim, np.float64)
     for t in range(steps):
-        pat, b = sched.sample(t)
-        kept = np_kept_indices(dim, pat.dp, b, sched.block)
+        dp, b = _draw(sched, t)
+        kept = np_kept_indices(dim, dp, b, sched.block)
         m = np.ones(dim, np.float64)
         m[kept] = 0.0
         counts += m
     return counts / steps
 
 
-def check_equivalence(sched: PatternSchedule, dim: int, target: float,
+def check_equivalence(sched, dim: int, target: float,
                       steps: int = 4000, mc_tol: float = 0.03,
                       exact_tol: float = 1e-9) -> dict:
-    """Returns a report dict; raises AssertionError on violation."""
-    exact = exact_unit_drop_marginals(sched.dist, dim, sched.block)
-    p_g = float(np.dot(sched.dist,
+    """Returns a report dict; raises AssertionError on violation.
+    ``sched``: a DropoutPlan or legacy PatternSchedule."""
+    dist = np.asarray(sched.dist, np.float64)
+    exact = exact_unit_drop_marginals(dist, dim, sched.block)
+    p_g = float(np.dot(dist,
                        (np.arange(1, sched.n_patterns + 1) - 1.0)
                        / np.arange(1, sched.n_patterns + 1)))
     # (1) marginal is uniform across units and equals the global rate

@@ -1,0 +1,619 @@
+"""DropoutPlan — the single configuration surface for structured dropout.
+
+The paper's core object is a *distribution over structured dropout
+patterns*.  Before this module it was smeared across four uncoordinated
+surfaces (``core.patterns.Pattern``, ``models.layers.PatternArgs``,
+``core.sampler.PatternSchedule``, ``core.search.SearchConfig``), each
+re-plumbed by hand through the train loop, serve engine and benchmarks.
+``DropoutPlan`` unifies them behind three registries (DESIGN.md §8):
+
+    BACKENDS       how compact matmuls execute: "slice" | "gather" | "pallas"
+    FAMILIES       what a pattern drops: "rdp" | "tdp" | "identity" | ...
+    BIAS_POLICIES  how per-layer biases derive from the sampled base bias
+
+Registering a new pattern family is one ``@register_family`` decorator on a
+``PatternFamily`` subclass (see ``core/colrdp.py`` for the column-RDP demo
+family); registering a new backend or bias policy is one function call.
+Everything is validated at construction — a typo like ``backend="palas"``
+raises ``ValueError`` immediately instead of silently falling through to a
+default path at call time.
+
+Objects:
+
+* ``DropoutPlan`` — the *distribution*: family + K over periods dp + block
+  geometry + backend + bias policy + per-layer overrides.  Owns
+  ``sample(step) -> BoundPlan`` (deterministic in (seed, step) — the
+  pattern-bucketing contract) and ``buckets()`` (every (dp, b) executable
+  bucket the plan can produce) so the train loop's schedule sampling and
+  the serve scheduler's (dp, b) bucketing go through the same object.
+* ``BoundPlan`` — one *concrete* pattern: (family, dp, bias, nb, backend).
+  Static/hashable, so jitted executables close over it; this is what the
+  model layers consume.  ``layer_bias(layer)`` resolves the per-layer bias
+  through the plan's policy + overrides (replacing the hardwired
+  ``PatternArgs.layer_bias``).
+
+Legacy ``models.layers.PatternArgs`` and ``core.sampler.build_schedule``
+remain as thin deprecation shims forwarding here (equivalence-tested
+bitwise in tests/test_plan.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+
+from . import patterns as P
+from .search import SearchConfig, search_distribution
+
+
+# ==========================================================================
+# Backend registry
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One execution strategy for compact pattern matmuls."""
+
+    name: str
+    doc: str = ""
+
+
+BACKENDS: dict[str, Backend] = {}
+
+
+def register_backend(name: str, doc: str = "") -> Backend:
+    """Register an execution backend.  Raises on duplicates."""
+    if name in BACKENDS:
+        raise ValueError(f"backend {name!r} already registered")
+    BACKENDS[name] = Backend(name, doc)
+    return BACKENDS[name]
+
+
+def validate_backend(name: str) -> str:
+    """Return ``name`` if registered, else raise a clear ValueError."""
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown pattern backend {name!r}; registered backends: "
+            f"{sorted(BACKENDS)}")
+    return name
+
+
+register_backend("slice", "XLA strided block slices (training default; "
+                          "TP-friendly, zero-communication per shard)")
+register_backend("gather", "XLA jnp.take gathers over kept unit indices "
+                           "(fuses into the matmul under jit)")
+register_backend("pallas", "compact-DMA Pallas kernels (kernels/*_matmul; "
+                           "interpret-mode on CPU, Mosaic on TPU)")
+
+
+# ==========================================================================
+# Bias-policy registry
+# ==========================================================================
+
+# fn(base_bias, layer, dp) -> int in [0, dp)
+BIAS_POLICIES: dict[str, Callable[[int, int, int], int]] = {}
+
+
+def register_bias_policy(name: str):
+    """Decorator registering a per-layer bias derivation."""
+    def deco(fn):
+        if name in BIAS_POLICIES:
+            raise ValueError(f"bias policy {name!r} already registered")
+        BIAS_POLICIES[name] = fn
+        return fn
+    return deco
+
+
+def validate_bias_policy(name: str) -> str:
+    if name not in BIAS_POLICIES:
+        raise ValueError(
+            f"unknown bias policy {name!r}; registered policies: "
+            f"{sorted(BIAS_POLICIES)}")
+    return name
+
+
+@register_bias_policy("layer_offset")
+def _policy_layer_offset(bias: int, layer: int, dp: int) -> int:
+    """Fold the layer index into the bias (cross-layer diversity) — the
+    historical ``PatternArgs.layer_bias`` rule."""
+    return (bias + layer) % dp
+
+
+@register_bias_policy("fixed")
+def _policy_fixed(bias: int, layer: int, dp: int) -> int:
+    """Same bias at every layer (the paper's one-pattern-per-iteration
+    reading taken literally)."""
+    return bias % dp
+
+
+@register_bias_policy("layer_hash")
+def _policy_layer_hash(bias: int, layer: int, dp: int) -> int:
+    """Decorrelated layer mixing via a Knuth multiplicative hash —
+    deterministic, but adjacent layers don't get adjacent biases."""
+    return (bias + ((layer * 2654435761) >> 16)) % dp
+
+
+# ==========================================================================
+# Family registry
+# ==========================================================================
+
+class PatternFamily:
+    """One structured-dropout pattern family.
+
+    Subclass, set the class attributes, implement ``apply_ffn`` (and
+    optionally ``oracle_ffn`` — the mask-multiply reference the generic
+    family×backend agreement tests in tests/test_kernels.py run against),
+    and decorate with ``@register_family``.  Nothing outside the registry
+    needs editing: layers dispatch through ``get_family``.
+    """
+
+    name: str = "?"
+    #: backends this family can execute on ("slice" = the structured XLA
+    #: path, "gather" = jnp.take, "pallas" = the compact-DMA kernels)
+    backends: tuple = ("slice", "gather")
+    #: whether MoE expert-hidden slicing applies (rdp-style compaction of
+    #: the per-expert hidden dim; families without it run experts dense)
+    moe_hidden_slice: bool = False
+    #: whether the SSM head-granular adaptation applies (DESIGN.md §4)
+    head_granular: bool = False
+
+    # ---- validation ------------------------------------------------------
+    def validate(self, nb: int, dp: int) -> None:
+        """Reject (nb, dp) combinations at construction time."""
+        if dp < 1:
+            raise ValueError(f"{self.name}: dp must be >= 1, got {dp}")
+        if dp > 1 and nb % dp != 0:
+            raise ValueError(
+                f"{self.name}: block count nb={nb} not divisible by "
+                f"dp={dp} — kept shapes would be bias-dependent")
+
+    def check_backend(self, backend: str) -> None:
+        validate_backend(backend)
+        if backend not in self.backends:
+            raise ValueError(
+                f"pattern family {self.name!r} does not support backend "
+                f"{backend!r}; supported: {list(self.backends)}")
+
+    # ---- execution -------------------------------------------------------
+    def apply_ffn(self, x, w_up, w_down, w_gate, *, dp: int, bias, nb: int,
+                  backend: str, act):
+        """(Gated) FFN under this family's pattern.  Returns the FFN
+        output *before* the residual-stream constrain (layers add it)."""
+        raise NotImplementedError
+
+    def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp: int, bias: int,
+                   nb: int, act):
+        """Mask-multiply reference semantics, or None if not applicable."""
+        return None
+
+
+FAMILIES: dict[str, PatternFamily] = {}
+
+
+def register_family(cls):
+    """Class decorator: instantiate and register a PatternFamily."""
+    inst = cls()
+    if inst.name in FAMILIES:
+        raise ValueError(f"pattern family {inst.name!r} already registered")
+    for b in inst.backends:
+        validate_backend(b)
+    FAMILIES[inst.name] = inst
+    return cls
+
+
+def get_family(name: str) -> PatternFamily:
+    if name not in FAMILIES:
+        raise ValueError(
+            f"unknown pattern family {name!r}; registered families: "
+            f"{sorted(FAMILIES)}")
+    return FAMILIES[name]
+
+
+def validate_family(name: str) -> str:
+    get_family(name)
+    return name
+
+
+# ==========================================================================
+# Shared execution helpers
+# ==========================================================================
+
+def _slice_blocks(w, axis: int, nb: int, dp: int, b):
+    """Strided keep-slice over ``axis`` split into ``nb`` blocks: keep block
+    j iff j % dp == b.  Static shapes; partitions cleanly when the per-shard
+    block count is divisible by dp."""
+    if dp == 1:
+        return w
+    dim = w.shape[axis]
+    assert dim % nb == 0 and nb % dp == 0, (dim, nb, dp)
+    blk = dim // nb
+    shape = w.shape[:axis] + (nb, blk) + w.shape[axis + 1:]
+    wt = w.reshape(shape)
+    sl = [slice(None)] * wt.ndim
+    sl[axis] = slice(b, None, dp)
+    wt = wt[tuple(sl)]
+    out_shape = w.shape[:axis] + (dim // dp,) + w.shape[axis + 1:]
+    return wt.reshape(out_shape)
+
+
+def _gather_blocks(w, axis: int, nb: int, dp: int, b):
+    """jnp.take twin of ``_slice_blocks`` — same kept set, same order."""
+    if dp == 1:
+        return w
+    idx = P.kept_unit_indices(w.shape[axis], dp, b, w.shape[axis] // nb)
+    return jnp.take(w, idx, axis=axis)
+
+
+# ==========================================================================
+# Built-in families
+# ==========================================================================
+
+@register_family
+class IdentityFamily(PatternFamily):
+    """dp=1 always — dense execution (eval mode / baseline)."""
+
+    name = "identity"
+    backends = ("slice", "gather", "pallas")
+
+    def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
+                  act):
+        h = x @ w_up
+        h = constrain(h, ("batch", "seq", "ffn"))
+        h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
+        return h @ w_down
+
+    def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        return self.apply_ffn(x, w_up, w_down, w_gate, dp=1, bias=0, nb=nb,
+                              backend="slice", act=act)
+
+
+@register_family
+class RdpFamily(PatternFamily):
+    """Row-based dropout (paper §III-A): drop hidden *neurons* of the FFN
+    on a strided block pattern; kept columns of w_up/w_gate and rows of
+    w_down form compact matrices at 1/dp the FLOPs."""
+
+    name = "rdp"
+    backends = ("slice", "gather", "pallas")
+    moe_hidden_slice = True
+    head_granular = True
+
+    def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
+                  act):
+        if backend == "pallas":
+            # compact Pallas kernels: kept column/row blocks are the only
+            # ones DMA'd (kernels/rdp_matmul); same kept set and ×dp
+            # placement as the XLA paths, so backends are interchangeable
+            from repro.kernels import ops as KO
+            return KO.rdp_ffn(x, w_up, w_down, jnp.int32(bias), dp=dp,
+                              act=act, w_gate=w_gate,
+                              block=w_up.shape[-1] // nb)
+        take = _gather_blocks if backend == "gather" else _slice_blocks
+        w_up = take(w_up, 1, nb, dp, bias)
+        w_down = take(w_down, 0, nb, dp, bias)
+        if w_gate is not None:
+            w_gate = take(w_gate, 1, nb, dp, bias)
+        h = x @ w_up
+        h = constrain(h, ("batch", "seq", "ffn"))
+        h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
+        h = h * dp  # inverted-dropout scale
+        return h @ w_down
+
+    def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        from .dropout import rdp_ffn_oracle
+        return rdp_ffn_oracle(x, w_up, w_down, dp, bias, act=act,
+                              w_gate=w_gate, block=w_up.shape[-1] // nb)
+
+
+@register_family
+class TdpFamily(PatternFamily):
+    """Tile-based dropout (paper §III-B): drop synapse *tiles* of the up
+    projection on the diagonal-period pattern (DropConnect-style)."""
+
+    name = "tdp"
+    backends = ("slice", "pallas")
+
+    def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
+                  act):
+        tile = max(w_up.shape[0] // nb, 1)
+        if backend == "pallas":
+            from repro.kernels import ops as KO
+            h = KO.tdp_mm(x, w_up, jnp.int32(bias), dp=dp, tile=tile)
+        else:
+            h = (x @ (w_up * P.tdp_mask(w_up.shape[0], w_up.shape[1], dp,
+                                        bias, tile, w_up.dtype))) * dp
+        h = constrain(h, ("batch", "seq", "ffn"))
+        # gate and down projection stay dense (only the up-projection's
+        # synapses are dropped) — matches the historical layers.py path
+        h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
+        return h @ w_down
+
+    def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        tile = max(w_up.shape[0] // nb, 1)
+        h = (x @ (w_up * P.tdp_mask(w_up.shape[0], w_up.shape[1], dp, bias,
+                                    tile, w_up.dtype))) * dp
+        h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
+        return h @ w_down
+
+
+# ==========================================================================
+# BoundPlan — one concrete pattern, consumed by model code
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class LayerOverride:
+    """Per-layer override: pin the bias or switch the pattern off."""
+
+    bias: Optional[int] = None
+    off: bool = False
+
+
+def _freeze_overrides(ov) -> tuple:
+    if not ov:
+        return ()
+    if isinstance(ov, Mapping):
+        items = sorted(ov.items())
+    else:
+        items = sorted(tuple(ov))
+    out = []
+    for layer, o in items:
+        if isinstance(o, Mapping):
+            o = LayerOverride(**o)
+        if not isinstance(o, LayerOverride):
+            raise TypeError(f"layer override for layer {layer} must be a "
+                            f"LayerOverride or mapping, got {type(o)}")
+        out.append((int(layer), o))
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundPlan:
+    """A concrete (family, dp, bias) pattern bound from a DropoutPlan.
+
+    Hashable and fully static: jitted executables close over one BoundPlan
+    per (dp, bias) bucket.  Validation happens here, at construction —
+    ``bias >= dp``, non-divisible block counts and unregistered
+    family/backend names all raise immediately.
+    """
+
+    family: str = "identity"
+    dp: int = 1
+    bias: int = 0
+    nb: int = 128
+    backend: str = "slice"
+    bias_policy: str = "layer_offset"
+    layer_overrides: tuple = ()
+
+    def __post_init__(self):
+        fam = get_family(self.family)
+        fam.check_backend(self.backend)
+        validate_bias_policy(self.bias_policy)
+        fam.validate(self.nb, self.dp)
+        if self.dp > 1 and not (0 <= self.bias < self.dp):
+            raise ValueError(
+                f"bias must be in [0, dp): got bias={self.bias}, "
+                f"dp={self.dp}")
+        ov = _freeze_overrides(self.layer_overrides)
+        for layer, o in ov:
+            if (o.bias is not None and self.dp > 1
+                    and not (0 <= o.bias < self.dp)):
+                raise ValueError(
+                    f"layer {layer} bias override {o.bias} outside "
+                    f"[0, dp={self.dp})")
+        object.__setattr__(self, "layer_overrides", ov)
+
+    # ---- compat aliases --------------------------------------------------
+    @property
+    def kind(self) -> str:
+        return self.family
+
+    @property
+    def active(self) -> bool:
+        return self.dp > 1
+
+    @property
+    def bucket(self) -> tuple:
+        """The (dp, bias) executable-bucket key."""
+        return (self.dp, self.bias)
+
+    @property
+    def flop_fraction(self) -> float:
+        """Fraction of dense FFN matmul FLOPs this pattern executes."""
+        return 1.0 / self.dp
+
+    # ---- per-layer resolution --------------------------------------------
+    def _override(self, layer: int) -> Optional[LayerOverride]:
+        for lyr, o in self.layer_overrides:
+            if lyr == layer:
+                return o
+        return None
+
+    def layer_bias(self, layer: int) -> int:
+        """Deterministic per-layer bias via the plan's policy + overrides."""
+        if self.dp <= 1:
+            return 0
+        o = self._override(layer)
+        if o is not None and o.off:
+            return 0
+        if o is not None and o.bias is not None:
+            return o.bias % self.dp
+        return BIAS_POLICIES[self.bias_policy](self.bias, layer, self.dp) \
+            % self.dp
+
+    def for_layer(self, layer: int) -> "BoundPlan":
+        """Resolve this pattern at one layer: bias policy applied, override
+        honored (``off`` collapses to the identity pattern)."""
+        o = self._override(layer)
+        if o is not None and o.off:
+            return IDENTITY
+        if not self.active:
+            return self
+        return dataclasses.replace(self, bias=self.layer_bias(layer),
+                                   bias_policy="fixed", layer_overrides=())
+
+
+IDENTITY = BoundPlan()
+
+
+def as_bound(pat) -> BoundPlan:
+    """Normalize any pattern argument to a BoundPlan.
+
+    Accepts None (→ identity), a BoundPlan (→ itself) or a legacy
+    ``models.layers.PatternArgs`` shim (duck-typed on ``.impl``).
+    """
+    if pat is None:
+        return IDENTITY
+    if isinstance(pat, BoundPlan):
+        return pat
+    if hasattr(pat, "impl"):                      # legacy PatternArgs shim
+        return BoundPlan(family=pat.kind, dp=pat.dp, bias=pat.bias,
+                         nb=pat.nb, backend=pat.impl)
+    raise TypeError(f"cannot interpret {type(pat).__name__} as a dropout "
+                    f"pattern; pass a BoundPlan (core.plan) or the legacy "
+                    f"PatternArgs shim")
+
+
+# ==========================================================================
+# DropoutPlan — the distribution over patterns
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class DropoutPlan:
+    """A distribution K over periods dp=1..N for one pattern family, plus
+    everything needed to execute a draw: block geometry, backend, bias
+    policy and per-layer overrides.
+
+    ``sample(step)`` is a pure function of (seed, step) — every host in a
+    multi-controller deployment computes the same pattern with zero
+    communication, and the trainer/scheduler keep one compiled executable
+    per ``buckets()`` entry (pattern bucketing, DESIGN.md §2).
+    """
+
+    family: str
+    dist: tuple                      # K over dp = 1..N
+    nb: int = 128                    # pattern blocks in the dropped dim
+    block: int = 128                 # units per block (mask oracles)
+    backend: str = "slice"
+    bias_policy: str = "layer_offset"
+    seed: int = 0
+    layer_overrides: tuple = ()
+
+    def __post_init__(self):
+        fam = get_family(self.family)
+        fam.check_backend(self.backend)
+        validate_bias_policy(self.bias_policy)
+        d = np.asarray(self.dist, np.float64)
+        if d.ndim != 1 or d.size < 1:
+            raise ValueError("dist must be a 1-D categorical distribution")
+        if not np.isclose(d.sum(), 1.0, atol=1e-5):
+            raise ValueError(f"dist must sum to 1, got {d.sum()}")
+        d = d / d.sum()
+        object.__setattr__(self, "dist", tuple(d.tolist()))
+        object.__setattr__(self, "layer_overrides",
+                           _freeze_overrides(self.layer_overrides))
+        for dp in self.support():
+            fam.validate(self.nb, dp)
+
+    # ---- distribution views ----------------------------------------------
+    @property
+    def n_patterns(self) -> int:
+        return len(self.dist)
+
+    def support(self) -> list[int]:
+        """Distinct dp values with nonzero probability."""
+        return [i + 1 for i, k in enumerate(self.dist) if k > 1e-9]
+
+    def buckets(self) -> list[tuple[int, int]]:
+        """Every (dp, bias) executable bucket this plan can produce —
+        the serve scheduler's bucket-key universe and the trainer's
+        worst-case compile count."""
+        return [(dp, b) for dp in self.support() for b in range(dp)]
+
+    def expected_flop_fraction(self) -> float:
+        """E[1/dp] — average fraction of dense FLOPs actually executed."""
+        dps = np.arange(1, self.n_patterns + 1, dtype=np.float64)
+        return float(np.dot(self.dist, 1.0 / dps))
+
+    def expected_rate(self) -> float:
+        """K · p_u — the plan's expected global dropout rate (Eq. 3)."""
+        dps = np.arange(1, self.n_patterns + 1, dtype=np.float64)
+        return float(np.dot(self.dist, (dps - 1.0) / dps))
+
+    # ---- binding ---------------------------------------------------------
+    def bind(self, dp: int, bias: int) -> BoundPlan:
+        """Bind one concrete (dp, bias) draw — validated at construction."""
+        return BoundPlan(family=self.family, dp=dp, bias=bias, nb=self.nb,
+                         backend=self.backend, bias_policy=self.bias_policy,
+                         layer_overrides=self.layer_overrides)
+
+    def identity(self) -> BoundPlan:
+        """The dp=1 (eval-mode) binding of this plan."""
+        return self.bind(1, 0)
+
+    def sample(self, step: Optional[int] = None, *,
+               rng: Optional[np.random.Generator] = None) -> BoundPlan:
+        """Deterministic BoundPlan for a step (or a draw from ``rng``).
+
+        Bitwise-identical draws to the legacy ``PatternSchedule.sample``
+        for the same (seed, step) — the shim-equivalence contract.
+        """
+        if rng is None:
+            if step is None:
+                raise ValueError("sample() needs a step or an rng")
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, int(step)]))
+        dp = int(rng.choice(self.n_patterns, p=self.dist)) + 1
+        b = int(rng.integers(0, dp))  # uniform over {0..dp-1}
+        return self.bind(dp, b)
+
+    def reseed(self, seed: int) -> "DropoutPlan":
+        return dataclasses.replace(self, seed=seed)
+
+    def with_backend(self, backend: str) -> "DropoutPlan":
+        return dataclasses.replace(self, backend=backend)
+
+    def with_nb(self, nb: int) -> "DropoutPlan":
+        return dataclasses.replace(self, nb=nb)
+
+
+# ==========================================================================
+# Constructors
+# ==========================================================================
+
+def build_plan(family: str, target_rate: float, nb: int, dp_max: int = 8,
+               block: int = 128, backend: str = "slice", seed: int = 0,
+               lam1: float = 0.85, lam2: float = 0.15,
+               bias_policy: str = "layer_offset",
+               layer_overrides=()) -> DropoutPlan:
+    """Search K (Alg. 1) restricted to divisor periods of ``nb`` and wrap
+    it in a DropoutPlan — the plan-native twin of the legacy
+    ``core.sampler.build_schedule`` (which now forwards here).
+    """
+    validate_family(family)
+    allowed = tuple(P.valid_periods(nb, dp_max))
+    if allowed == (1,):
+        raise ValueError(
+            f"dimension with {nb} blocks admits no nontrivial period "
+            f"<= {dp_max}; increase dp_max or change blocking")
+    cfg = SearchConfig(target_rate=target_rate, n_patterns=dp_max,
+                       lam1=lam1, lam2=lam2, allowed=allowed)
+    k, _, _ = search_distribution(cfg, seed=seed)
+    return DropoutPlan(family=family, dist=tuple(k.tolist()), nb=nb,
+                       block=block, backend=backend, seed=seed,
+                       bias_policy=bias_policy,
+                       layer_overrides=layer_overrides)
+
+
+def identity_plan(family: str = "identity", nb: int = 128,
+                  block: int = 128) -> DropoutPlan:
+    """dp=1 always — no dropout (eval mode / baseline)."""
+    return DropoutPlan(family=family, dist=(1.0,), nb=nb, block=block)
+
+
+# the column-RDP demo family registers itself on import; importing it here
+# (after the registries exist) makes it available everywhere plan is used
+from . import colrdp as _colrdp  # noqa: E402,F401

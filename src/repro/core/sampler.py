@@ -1,9 +1,15 @@
 """Per-iteration dropout-pattern sampling & pattern bucketing (paper §III-D).
 
+DEPRECATED SHIM — the canonical API is ``repro.core.plan.DropoutPlan``
+(DESIGN.md §8).  ``PatternSchedule`` and ``build_schedule`` remain for
+backwards compatibility and forward to the plan machinery; their sampling
+is bitwise-identical to ``DropoutPlan.sample`` for the same (seed, step)
+(equivalence-tested in tests/test_plan.py).
+
 Each training step samples a pattern ``dp ~ K`` and a bias
-``b ~ Uniform{0..dp-1}``.  Under jit, ``dp`` must be static (it determines the
-compact shapes), so the sampler lives on the *host* and the trainer keeps one
-compiled executable per distinct dp ("pattern bucketing", DESIGN.md §2).
+``b ~ Uniform{0..dp-1}``.  Under jit, ``dp`` must be static (it determines
+the compact shapes), so the sampler lives on the *host* and the trainer
+keeps one compiled executable per distinct dp ("pattern bucketing").
 ``b`` is folded from the step number and passed as a traced scalar — no
 recompilation across biases.
 
@@ -17,13 +23,17 @@ import dataclasses
 
 import numpy as np
 
-from .patterns import Pattern, PatternKind, valid_periods
-from .search import SearchConfig, search_distribution
+from .patterns import Pattern, PatternKind
+from .plan import DropoutPlan, build_plan
 
 
 @dataclasses.dataclass(frozen=True)
 class PatternSchedule:
-    """Samples (dp, b) per step from a searched distribution K."""
+    """DEPRECATED: samples (dp, b) per step from a searched distribution K.
+
+    Thin wrapper over ``DropoutPlan`` kept for legacy call sites; new code
+    should hold a plan and call ``plan.sample(step) -> BoundPlan``.
+    """
 
     kind: PatternKind
     dist: np.ndarray                 # K over dp = 1..N
@@ -59,28 +69,34 @@ class PatternSchedule:
         dps = np.arange(1, self.n_patterns + 1, dtype=np.float64)
         return float(np.dot(self.dist, 1.0 / dps))
 
+    def to_plan(self, nb: int, backend: str = "slice",
+                bias_policy: str = "layer_offset") -> DropoutPlan:
+        """Lift this legacy schedule into the canonical DropoutPlan.
+
+        ``nb`` (the pattern-block *count* of the dropped dimension) is
+        required: the schedule only stores ``block`` (units per block), so
+        there is nothing sensible to default it to.
+        """
+        return DropoutPlan(
+            family=self.kind, dist=tuple(np.asarray(self.dist).tolist()),
+            nb=nb, block=self.block,
+            backend=backend, bias_policy=bias_policy, seed=self.seed)
+
 
 def build_schedule(kind: PatternKind, target_rate: float, n_units_blocks: int,
                    dp_max: int = 8, block: int = 128, seed: int = 0,
                    lam1: float = 0.85, lam2: float = 0.15) -> PatternSchedule:
-    """Search K (Alg. 1) restricted to divisor periods of the blocked dim and
-    wrap it in a schedule.
+    """DEPRECATED: forwards to ``core.plan.build_plan`` and wraps the
+    searched distribution in a legacy PatternSchedule.  New code:
 
-    ``n_units_blocks``: number of pattern blocks in the dimension dropout is
-    applied to (e.g. d_ff/128 for group-RDP on an FFN).  Restricting to
-    divisors keeps kept-counts bias-independent → static shapes.
+        plan = build_plan(kind, target_rate, nb=n_units_blocks, ...)
     """
-    allowed = tuple(valid_periods(n_units_blocks, dp_max))
-    if allowed == (1,):
-        raise ValueError(
-            f"dimension with {n_units_blocks} blocks admits no nontrivial "
-            f"period <= {dp_max}; increase dp_max or change blocking")
-    cfg = SearchConfig(target_rate=target_rate, n_patterns=dp_max,
-                       lam1=lam1, lam2=lam2, allowed=allowed)
-    k, _, _ = search_distribution(cfg, seed=seed)
-    return PatternSchedule(kind=kind, dist=k, block=block, seed=seed)
+    plan = build_plan(kind, target_rate, nb=n_units_blocks, dp_max=dp_max,
+                      block=block, seed=seed, lam1=lam1, lam2=lam2)
+    return PatternSchedule(kind=kind, dist=np.asarray(plan.dist),
+                           block=block, seed=seed)
 
 
 def identity_schedule(kind: PatternKind = "rdp", block: int = 128) -> PatternSchedule:
-    """dp=1 always — no dropout (eval mode / baseline)."""
+    """DEPRECATED: dp=1 always — see ``core.plan.identity_plan``."""
     return PatternSchedule(kind=kind, dist=np.array([1.0]), block=block)

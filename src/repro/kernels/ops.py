@@ -11,9 +11,7 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import patterns as P
 from . import ref
 from .rdp_matmul import rdp_matmul_cols, rdp_matmul_rows
 from .tdp_matmul import tdp_matmul

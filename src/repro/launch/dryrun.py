@@ -30,11 +30,11 @@ from repro.configs import (ARCH_IDS, SHAPES, cell_supported, get_spec,
                            input_specs, normalize)
 from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
 from repro.launch.mesh import make_production_mesh
+from repro.core.plan import BoundPlan, IDENTITY
 from repro.models import init_lm
-from repro.models.layers import NO_PATTERN, PatternArgs
 from repro.optim.optimizers import AdamW
 from repro.parallel.sharding import (PROFILES, logical_sharding,
-                                     param_shardings, set_mesh_and_rules,
+                                     set_mesh_and_rules,
                                      zero1_opt_sharding)
 from repro.serve import engine as serve
 from repro.train.train_step import make_train_step
@@ -116,8 +116,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
         profile = spec.profile if shape.kind == "train" else spec.serve_profile
     result["profile"] = profile
     rules = PROFILES[profile]
-    pat = (PatternArgs(dp=dp, bias=0, kind=cfg.pattern_kind,
-                       nb=cfg.pattern_nb) if dp > 1 else NO_PATTERN)
+    pat = (BoundPlan(family=cfg.pattern_kind, dp=dp, bias=0,
+                     nb=cfg.pattern_nb) if dp > 1 else IDENTITY)
 
     t0 = time.time()
     with set_mesh_and_rules(mesh, rules):

@@ -4,23 +4,27 @@ Everything is plain JAX: params are nested dicts of arrays; each init_*
 returns ``(params, axes)`` where ``axes`` mirrors params with logical-axis
 tuples (see parallel/sharding.py).  No flax dependency.
 
-Approximate Random Dropout integration: FFN blocks accept a ``PatternArgs``
-(dp static, bias static) and compute only the kept 1/dp of the hidden
-dimension via *strided block slices* — TP-friendly (each model shard slices
-locally, no gather) and shape-static per (dp, bias) executable bucket
-(DESIGN.md §2).
+Approximate Random Dropout integration: FFN/MoE/SSM blocks accept a pattern
+(a ``core.plan.BoundPlan``, or the legacy ``PatternArgs`` shim; dp and bias
+static) and compute only the kept 1/dp of the hidden dimension, dispatching
+the pattern math through the family/backend registries in ``core.plan``
+(DESIGN.md §8).  The default "slice" backend uses *strided block slices* —
+TP-friendly (each model shard slices locally, no gather) and shape-static
+per (dp, bias) executable bucket (DESIGN.md §2).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
-from typing import Callable, Optional
+from typing import Callable, Literal, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as plan_mod
+from repro.core.plan import BoundPlan, _slice_blocks
 from repro.parallel.sharding import constrain
 
 Init = jax.nn.initializers
@@ -42,52 +46,48 @@ else:
 
 @dataclasses.dataclass(frozen=True)
 class PatternArgs:
-    """Static per-step dropout pattern for the distributed models.
+    """DEPRECATED shim over ``repro.core.plan.BoundPlan``.
 
-    ``dp`` — period (1 = no dropout); ``bias`` — base block offset; both
-    static so kept sub-weights are strided slices (XLA partitions those
-    without communication).  ``kind`` selects RDP (neuron) vs TDP (synapse).
-    ``nb`` — number of pattern blocks the hidden dim is divided into
-    (per-shard-uniform; must be divisible by dp).
-    ``impl`` — how RDP FFNs execute the compact matmuls: "slice" (XLA
-    strided-slice gather, the training default) or "pallas" (the
-    kernels/rdp_matmul compact-DMA kernels; interpret-mode on CPU) — the
-    serving runtime uses "pallas" so ensemble members hit the kernel path.
+    The canonical pattern object is ``BoundPlan`` (constructed through a
+    ``DropoutPlan``); every layer below accepts either and normalizes via
+    ``plan.as_bound``.  This dataclass keeps the historical field names
+    alive for legacy call sites and forwards all semantics — including
+    validation: an unregistered ``impl``/``kind``, a ``bias >= dp`` or a
+    block count not divisible by ``dp`` raise ``ValueError`` at
+    construction (previously a typo like ``impl="palas"`` silently fell
+    through to the slice path).
+
+    ``dp`` — period (1 = no dropout); ``bias`` — base block offset;
+    ``kind`` — pattern family name ("rdp" | "tdp" | ...); ``nb`` — number
+    of pattern blocks in the dropped dim; ``impl`` — execution backend
+    ("slice" | "gather" | "pallas").
     """
     dp: int = 1
     bias: int = 0
     kind: str = "rdp"
     nb: int = 128
-    impl: str = "slice"
+    impl: Literal["slice", "gather", "pallas"] = "slice"
+
+    def __post_init__(self):
+        self.bound  # constructing the BoundPlan runs all validation
+
+    @property
+    def bound(self) -> BoundPlan:
+        """The canonical BoundPlan this shim forwards to."""
+        return BoundPlan(family=self.kind, dp=self.dp, bias=self.bias,
+                         nb=self.nb, backend=self.impl)
 
     @property
     def active(self) -> bool:
         return self.dp > 1
 
     def layer_bias(self, layer: int) -> int:
-        """Fold the layer index into the bias for cross-layer diversity."""
-        return (self.bias + layer) % self.dp if self.dp > 1 else 0
+        """Fold the layer index into the bias for cross-layer diversity
+        (forwards to the plan's default "layer_offset" bias policy)."""
+        return self.bound.layer_bias(layer)
 
 
 NO_PATTERN = PatternArgs()
-
-
-def _slice_blocks(w: jax.Array, axis: int, nb: int, dp: int, b: int):
-    """Strided keep-slice over ``axis`` split into ``nb`` blocks: keep block
-    j iff j % dp == b.  Static shapes; partitions cleanly when the per-shard
-    block count is divisible by dp."""
-    if dp == 1:
-        return w
-    dim = w.shape[axis]
-    assert dim % nb == 0 and nb % dp == 0, (dim, nb, dp)
-    blk = dim // nb
-    shape = w.shape[:axis] + (nb, blk) + w.shape[axis + 1:]
-    wt = w.reshape(shape)
-    sl = [slice(None)] * wt.ndim
-    sl[axis] = slice(b, None, dp)
-    wt = wt[tuple(sl)]
-    out_shape = w.shape[:axis] + (dim // dp,) + w.shape[axis + 1:]
-    return wt.reshape(out_shape)
 
 
 # --------------------------------------------------------------------------
@@ -284,46 +284,30 @@ def init_ffn(d_model: int, d_ff: int, gated: bool = True, dtype=jnp.bfloat16):
     return params, axes
 
 
-def ffn_block(params, x, pat: PatternArgs = NO_PATTERN, *, layer: int = 0,
+def ffn_block(params, x, pat=NO_PATTERN, *, layer: int = 0,
               act: Callable = jax.nn.silu) -> jax.Array:
     """(Gated) FFN computing only the kept 1/dp of the hidden dim.
 
-    RDP: strided block-slice of w_up/w_gate columns and w_down rows —
-    identical numerics to mask-dropout + ×dp rescale, at 1/dp the FLOPs and
-    weight bytes.  TDP: diagonal tile pattern on the up projection.
+    ``pat``: a ``BoundPlan`` (or the legacy ``PatternArgs`` shim).  The
+    actual pattern math is dispatched through the family registry
+    (core.plan.FAMILIES): rdp slices w_up/w_gate columns and w_down rows,
+    tdp masks diagonal synapse tiles of the up projection, col_rdp slices
+    input columns — each on its plan-selected backend (slice/gather/pallas).
     """
-    dp, b = pat.dp, pat.layer_bias(layer)
+    bp = plan_mod.as_bound(pat).for_layer(layer)
     w_up, w_down = params["w_up"], params["w_down"]
     w_gate = params.get("w_gate")
-    if pat.active and pat.kind == "rdp" and pat.impl == "pallas":
-        # compact Pallas kernels: kept column/row blocks are the only ones
-        # DMA'd (kernels/rdp_matmul); same kept set and ×dp placement as the
-        # slice path below, so the two impls are numerically interchangeable
-        from repro.kernels import ops as KO
-        out = KO.rdp_ffn(x, w_up, w_down, jnp.int32(b), dp=dp, act=act,
-                         w_gate=w_gate, block=w_up.shape[-1] // pat.nb)
+    if bp.active:
+        fam = plan_mod.get_family(bp.family)
+        out = fam.apply_ffn(x, w_up, w_down, w_gate, dp=bp.dp, bias=bp.bias,
+                            nb=bp.nb, backend=bp.backend, act=act)
         return constrain(out, ("batch", "res_seq", "embed"))
-    if pat.active and pat.kind == "rdp":
-        w_up = _slice_blocks(w_up, 1, pat.nb, dp, b)
-        w_down = _slice_blocks(w_down, 0, pat.nb, dp, b)
-        if w_gate is not None:
-            w_gate = _slice_blocks(w_gate, 1, pat.nb, dp, b)
     h = x @ w_up
-    if pat.active and pat.kind == "tdp":
-        # TDP drops synapse tiles of the up projection (DropConnect-style);
-        # diagonal mask folded as a strided row-roll — here: mask-mul oracle
-        # semantics on the XLA path (kernels/tdp_matmul is the TPU fast path).
-        from repro.core.patterns import tdp_mask
-        tile = max(w_up.shape[0] // pat.nb, 1)
-        h = (x @ (w_up * tdp_mask(w_up.shape[0], w_up.shape[1], dp, b,
-                                  tile, w_up.dtype))) * dp
     h = constrain(h, ("batch", "seq", "ffn"))
     if w_gate is not None:
         h = act(h) * (x @ w_gate)
     else:
         h = act(h)
-    if pat.active and pat.kind == "rdp":
-        h = h * dp  # inverted-dropout scale
     out = h @ w_down
     return constrain(out, ("batch", "res_seq", "embed"))
 
@@ -353,14 +337,16 @@ def init_moe(d_model: int, d_ff: int, n_experts: int, n_shared: int = 0,
 
 
 def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
-              pat: PatternArgs = NO_PATTERN, layer: int = 0,
+              pat=NO_PATTERN, layer: int = 0,
               act: Callable = jax.nn.silu):
     """Top-k routed MoE with static per-expert capacity.
 
     Dispatch via scatter-add into [E, C, d] buffers (no [T,E,C] one-hot);
     under `ep_full` rules the buffers shard over experts and XLA inserts the
     all-to-all.  Approximate dropout applies *within* experts (same dp, bias
-    offset by expert index — DESIGN.md §4).  Returns (y, aux_loss).
+    offset by expert index — DESIGN.md §4); only families declaring
+    ``moe_hidden_slice`` (rdp) compact the expert hidden dim — others run
+    experts dense.  Returns (y, aux_loss).
     """
     B, S, d = x.shape
     E = params["router"].shape[-1]
@@ -396,13 +382,15 @@ def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
     buf = constrain(buf[:, :C], ("experts", None, "embed"))
 
     # per-expert FFN (batched over experts; within-expert approx dropout)
-    dp = pat.dp if (pat.active and pat.kind == "rdp") else 1
+    bp = plan_mod.as_bound(pat).for_layer(layer)
+    dp = bp.dp if (bp.active
+                   and plan_mod.get_family(bp.family).moe_hidden_slice) else 1
     w_up, w_gate, w_down = params["w_up"], params["w_gate"], params["w_down"]
     if dp > 1:
-        b = pat.layer_bias(layer)
-        w_up = _slice_blocks(w_up, 2, pat.nb, dp, b)
-        w_gate = _slice_blocks(w_gate, 2, pat.nb, dp, b)
-        w_down = _slice_blocks(w_down, 1, pat.nb, dp, b)
+        b = bp.bias
+        w_up = _slice_blocks(w_up, 2, bp.nb, dp, b)
+        w_gate = _slice_blocks(w_gate, 2, bp.nb, dp, b)
+        w_down = _slice_blocks(w_down, 1, bp.nb, dp, b)
     h = jnp.einsum("ecd,edf->ecf", buf, w_up)
     h = act(h) * jnp.einsum("ecd,edf->ecf", buf, w_gate)
     if dp > 1:
@@ -429,7 +417,7 @@ def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
 
 def moe_block_ep(params, x, *, top_k: int, n_experts: int,
                  capacity_factor: float = 1.25,
-                 pat: PatternArgs = NO_PATTERN, layer: int = 0,
+                 pat=NO_PATTERN, layer: int = 0,
                  act: Callable = jax.nn.silu):
     """Expert-parallel MoE: shard_map + all_to_all dispatch (the optimized
     beyond-baseline path, EXPERIMENTS.md §Perf).
@@ -475,8 +463,10 @@ def moe_block_ep(params, x, *, top_k: int, n_experts: int,
     E_loc = E // n_ep
 
     # within-expert approximate dropout (same dp for every expert)
-    dp = pat.dp if (pat.active and pat.kind == "rdp") else 1
-    b_pat = pat.layer_bias(layer) if dp > 1 else 0
+    bp = plan_mod.as_bound(pat).for_layer(layer)
+    dp = bp.dp if (bp.active
+                   and plan_mod.get_family(bp.family).moe_hidden_slice) else 1
+    b_pat = bp.bias if dp > 1 else 0
 
     def mapped(xl, router, w_up, w_gate, w_down):
         # xl: [B/nb, S/ns, d] — this device's tokens
@@ -511,9 +501,9 @@ def moe_block_ep(params, x, *, top_k: int, n_experts: int,
 
         wu, wg, wd = w_up, w_gate, w_down                    # [E_loc, d, f]
         if dp > 1:
-            wu = _slice_blocks(wu, 2, pat.nb, dp, b_pat)
-            wg = _slice_blocks(wg, 2, pat.nb, dp, b_pat)
-            wd = _slice_blocks(wd, 1, pat.nb, dp, b_pat)
+            wu = _slice_blocks(wu, 2, bp.nb, dp, b_pat)
+            wg = _slice_blocks(wg, 2, bp.nb, dp, b_pat)
+            wd = _slice_blocks(wd, 1, bp.nb, dp, b_pat)
         h = jnp.einsum("ecd,edf->ecf", recv, wu)
         h = act(h) * jnp.einsum("ecd,edf->ecf", recv, wg)
         if dp > 1:
@@ -595,25 +585,28 @@ def _segsum(x):
 
 def mamba2_block(params, x, *, d_state: int, headdim: int = 64,
                  expand: int = 2, d_conv: int = 4, chunk: int = 256,
-                 pat: PatternArgs = NO_PATTERN, layer: int = 0):
+                 pat=NO_PATTERN, layer: int = 0):
     """SSD mixer on [B, L, d_model] (training/prefill path).
 
     Approximate dropout applies to the in/out projections' expanded
     channels (head-granular so the recurrence stays well-formed): kept
     heads are computed, dropped heads contribute zero — DESIGN.md §4.
+    Only families declaring ``head_granular`` (rdp) participate.
     """
     B, L, _ = x.shape
     d_inner = expand * x.shape[-1]
     n_heads = d_inner // headdim
 
     # --- projections (RDP over heads: slice head-blocks of in/out proj) ---
-    dp = pat.dp if (pat.active and pat.kind == "rdp") else 1
+    bp = plan_mod.as_bound(pat).for_layer(layer)
+    dp = bp.dp if (bp.active
+                   and plan_mod.get_family(bp.family).head_granular) else 1
     in_proj, out_proj = params["in_proj"], params["out_proj"]
     conv_w, conv_b = params["conv_w"], params["conv_b"]
     A_log, D, dt_bias = params["A_log"], params["D"], params["dt_bias"]
     nh = n_heads
     if dp > 1:
-        b = pat.layer_bias(layer)
+        b = bp.bias
         assert n_heads % dp == 0, (n_heads, dp)
         keep = (jnp.arange(n_heads // dp) * dp + b) % n_heads
         # split in_proj columns: z | x | B | C | dt

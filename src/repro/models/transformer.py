@@ -6,22 +6,22 @@ prefill path (scan over layers, optional remat), ``decode_step`` the serving
 path with KV / SSM-state caches.
 
 Approximate Random Dropout is a first-class argument: every entry point
-takes a ``PatternArgs`` (static dp/bias) and the FFN/MoE/SSM blocks compute
-only the kept 1/dp of their hidden units (see layers.py).
+takes a pattern — a ``core.plan.BoundPlan`` (static dp/bias bound from a
+``DropoutPlan``), or the legacy ``PatternArgs`` shim — and the FFN/MoE/SSM
+blocks compute only the kept 1/dp of their hidden units (see layers.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import plan as plan_mod
 from repro.parallel.sharding import constrain
 from . import layers as L
-from .layers import NO_PATTERN, PatternArgs
+from .layers import NO_PATTERN, PatternArgs  # noqa: F401 (re-export compat)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -314,23 +314,28 @@ def _run_shared_attn(cfg, sp, x, x0, pat, layer_idx):
     return x + f
 
 
-def _ffn_pat(cfg, pat: PatternArgs) -> PatternArgs:
-    return dataclasses.replace(pat, nb=cfg.pattern_nb) if pat.active else pat
+def _ffn_pat(cfg, pat) -> plan_mod.BoundPlan:
+    bp = plan_mod.as_bound(pat)
+    return dataclasses.replace(bp, nb=cfg.pattern_nb) if bp.active else bp
 
 
-def _moe_pat(cfg, pat: PatternArgs) -> PatternArgs:
+def _moe_pat(cfg, pat) -> plan_mod.BoundPlan:
     # experts have their own (smaller) hidden dim; reuse nb if it divides
+    bp = plan_mod.as_bound(pat)
     nb = cfg.pattern_nb
     while cfg.moe_d_ff % nb != 0:
         nb //= 2
-    return dataclasses.replace(pat, nb=nb) if pat.active else pat
+    return dataclasses.replace(bp, nb=nb) if bp.active else bp
 
 
-def _ssm_pat(cfg, pat: PatternArgs) -> PatternArgs:
-    # head-granular for SSD; nb = n_heads (dp must divide head count)
-    if pat.active and cfg.ssm_heads % pat.dp == 0:
-        return dataclasses.replace(pat, nb=cfg.ssm_heads)
-    return NO_PATTERN
+def _ssm_pat(cfg, pat) -> plan_mod.BoundPlan:
+    # head-granular for SSD; nb = n_heads (dp must divide head count);
+    # families without the head-granular adaptation run the SSM dense
+    bp = plan_mod.as_bound(pat)
+    if (bp.active and plan_mod.get_family(bp.family).head_granular
+            and cfg.ssm_heads % bp.dp == 0):
+        return dataclasses.replace(bp, nb=cfg.ssm_heads)
+    return plan_mod.IDENTITY
 
 
 def _window_for(cfg, i_arr, S):
@@ -345,10 +350,12 @@ def _window_for(cfg, i_arr, S):
                      jnp.int32(cfg.sliding_window))
 
 
-def forward(cfg: ModelConfig, params, tokens, pat: PatternArgs = NO_PATTERN,
+def forward(cfg: ModelConfig, params, tokens, pat=NO_PATTERN,
             vision_embeds=None):
     """Train-path forward.  tokens: [B, S] (or [B, K, S] for codebooks).
+    ``pat``: a core.plan.BoundPlan (or the legacy PatternArgs shim).
     Returns (logits[f32], aux_loss)."""
+    pat = plan_mod.as_bound(pat)
     if cfg.n_codebooks:
         B, K, S = tokens.shape
         x = jnp.zeros((B, S, cfg.d_model), cfg.jdtype)
@@ -417,8 +424,9 @@ def forward(cfg: ModelConfig, params, tokens, pat: PatternArgs = NO_PATTERN,
 # loss
 # --------------------------------------------------------------------------
 
-def lm_loss(cfg: ModelConfig, params, batch, pat: PatternArgs = NO_PATTERN):
-    """batch: {tokens, labels, [vision_embeds]}.  Returns (loss, metrics)."""
+def lm_loss(cfg: ModelConfig, params, batch, pat=NO_PATTERN):
+    """batch: {tokens, labels, [vision_embeds]}.  ``pat``: a BoundPlan or
+    legacy PatternArgs.  Returns (loss, metrics)."""
     logits, aux = forward(cfg, params, batch["tokens"], pat,
                           batch.get("vision_embeds"))
     labels = batch["labels"]

@@ -12,7 +12,8 @@ DeepSeek's cache saving — and decodes with *absorbed* matmuls when
 ``cfg.mla_absorb``.
 
 Approximate Random Dropout at serving: plain serving uses dp=1 (eval mode),
-but every entry point takes a ``PatternArgs`` and applies it to the FFN/MoE
+but every entry point takes a pattern (a ``core.plan.BoundPlan``, or the
+legacy ``PatternArgs`` shim) and applies it to the FFN/MoE
 blocks exactly like the train-path ``forward`` does — that is what lets the
 MC-dropout ensemble runtime (serve/scheduler.py) run each ensemble member as
 a (dp, b) sub-model at 1/dp of the FFN FLOPs.  SSM prefill/decode layers stay
@@ -27,13 +28,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.layers import NO_PATTERN, PatternArgs
+from repro.models.layers import NO_PATTERN
 from repro.models.transformer import (ModelConfig, layer_groups, _ffn_pat,
                                       _moe_pat)
 from repro.parallel.sharding import constrain
@@ -176,7 +176,7 @@ def _qkv_step(cfg, lp, h, pos, d2: bool = False):
 
 
 def _attn_decode_layer(cfg, lp, x, cache_l, pos, local: bool,
-                       pat: PatternArgs = NO_PATTERN):
+                       pat=NO_PATTERN):
     """One dense-layer decode: returns (x_out, new_cache_l)."""
     h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
     if cfg.mla:
@@ -292,7 +292,7 @@ def _ssm_decode_layer(cfg, lp, x, cache_l, pos):
 
 
 def _shared_attn_decode(cfg, sp, x, x0, cache_l, pos,
-                        pat: PatternArgs = NO_PATTERN):
+                        pat=NO_PATTERN):
     d2 = 2 * cfg.d_model
     h2 = jnp.concatenate([x, x0], -1)
     h2 = L.rms_norm(sp["norm1"], h2, cfg.norm_eps)
@@ -311,7 +311,7 @@ def _shared_attn_decode(cfg, sp, x, x0, cache_l, pos,
 # --------------------------------------------------------------------------
 
 def decode_step(cfg: ModelConfig, params, cache, tokens,
-                pat: PatternArgs = NO_PATTERN):
+                pat=NO_PATTERN):
     """One token for every sequence.  tokens: [B,1] ([B,K,1] codebooks).
     Returns (logits [B,(K,)V], new_cache)."""
     pos = cache["pos"]
@@ -363,7 +363,7 @@ def cache_l_expand(cl):
 
 
 def prefill(cfg: ModelConfig, params, tokens, max_len: int,
-            vision_embeds=None, pat: PatternArgs = NO_PATTERN):
+            vision_embeds=None, pat=NO_PATTERN):
     """Process a full prompt, returning (last-token logits, filled cache).
 
     Memory-bounded: attention is blockwise; caches are written per layer.
@@ -418,7 +418,7 @@ def prefill(cfg: ModelConfig, params, tokens, max_len: int,
 
 
 def _attn_prefill_layer(cfg, lp, x, max_len, local,
-                        pat: PatternArgs = NO_PATTERN):
+                        pat=NO_PATTERN):
     B, S, _ = x.shape
     h = L.rms_norm(lp["norm1"], x, cfg.norm_eps)
     if cfg.mla:
@@ -513,7 +513,7 @@ def _ssm_prefill_layer(cfg, lp, x):
 
 
 def _shared_attn_prefill(cfg, sp, x, x0, max_len,
-                         pat: PatternArgs = NO_PATTERN):
+                         pat=NO_PATTERN):
     B, S, _ = x.shape
     h2 = jnp.concatenate([x, x0], -1)
     h2 = L.rms_norm(sp["norm1"], h2, cfg.norm_eps)
@@ -538,7 +538,7 @@ def _shared_attn_prefill(cfg, sp, x, x0, max_len,
 # --------------------------------------------------------------------------
 
 def decode_step_ragged(cfg: ModelConfig, params, cache, tokens,
-                       pat: PatternArgs = NO_PATTERN):
+                       pat=NO_PATTERN):
     """One decode step for a batch whose sequences sit at DIFFERENT positions.
 
     ``cache["pos"]`` is a per-sequence [B] int32 vector (continuous batching
@@ -597,7 +597,7 @@ def _chunk_attention(q, k_cache, v_cache, pos0):
     return o.reshape(B, Sc, H, v_cache.shape[-1]).astype(q.dtype)
 
 
-def _attn_chunk_layer(cfg, lp, x, cache_l, pos0, pat: PatternArgs):
+def _attn_chunk_layer(cfg, lp, x, cache_l, pos0, pat):
     """Chunk-extend one dense/moe attention layer: write the chunk's K/V at
     [pos0, pos0+Sc), attend causally over the cache, run the FFN."""
     B, Sc, _ = x.shape
@@ -637,7 +637,7 @@ def _attn_chunk_layer(cfg, lp, x, cache_l, pos0, pat: PatternArgs):
 
 
 def prefill_extend(cfg: ModelConfig, params, cache, tokens,
-                   pat: PatternArgs = NO_PATTERN):
+                   pat=NO_PATTERN):
     """Extend a partially-filled cache by one prompt chunk.
 
     tokens: [B, Sc] — the next Sc prompt tokens of every sequence, starting

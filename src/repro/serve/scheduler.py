@@ -14,11 +14,13 @@ The runtime core (DESIGN.md §7).  One ``step()`` is one scheduler iteration:
    same step (per-step join/evict).
 
 Paper tie-in: a request may ask for an MC-dropout ensemble of size E.  Each
-member samples a pattern ``(dp, b)`` from the request's ``PatternSchedule``
-(deterministic in (seed, member)), and members sharing a bucket decode in
-the same batch through ONE compiled executable — ``dp``/``b`` are static, so
-bucketing is what keeps the executable count bounded while members with
-``dp > 1`` run their FFNs through the compact RDP kernels at 1/dp FLOPs.
+member samples a pattern ``(dp, b)`` from the scheduler's ``DropoutPlan``
+(deterministic in (request seed, member) — the same object the train loop
+samples from), and members sharing a bucket decode in the same batch
+through ONE compiled executable — ``dp``/``b`` are static, so bucketing is
+what keeps the executable count bounded (``plan.buckets()`` is the bucket
+universe) while members with ``dp > 1`` run their FFNs through the
+plan-selected backend at 1/dp FFN FLOPs.
 
 Everything is synchronous and deterministic: same (seed, arrival trace) →
 same admission order → same buckets → same greedy token streams.
@@ -34,8 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as plan_mod
+from repro.core.plan import DropoutPlan
 from repro.core.sampler import PatternSchedule
-from repro.models.layers import NO_PATTERN, PatternArgs
 from repro.models.transformer import ModelConfig
 
 from . import engine
@@ -116,8 +119,9 @@ class Scheduler:
     def __init__(self, cfg: ModelConfig, params, *, capacity: int = 8,
                  max_len: int = 128, prefill_chunk: int = 16,
                  max_queue: int = 64,
+                 plan: Optional[DropoutPlan] = None,
                  schedule: Optional[PatternSchedule] = None,
-                 pattern_impl: str = "pallas",
+                 pattern_impl: Optional[str] = None,
                  eos_token: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None,
                  pad_buckets: bool = True):
@@ -133,8 +137,22 @@ class Scheduler:
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
         self.max_queue = max_queue
+        # DropoutPlan is the canonical pattern configuration; the legacy
+        # ``schedule=PatternSchedule`` + ``pattern_impl`` pair is lifted
+        # into a plan here (deprecation shim).  The plan's nb is pinned to
+        # the model's pattern blocking, and ``pattern_impl`` (when given)
+        # overrides the plan's backend.
+        if plan is None and schedule is not None:
+            plan = schedule.to_plan(nb=cfg.pattern_nb,
+                                    backend=pattern_impl or "pallas")
+        elif plan is not None:
+            plan = plan.with_nb(cfg.pattern_nb)
+            if pattern_impl is not None:
+                plan = plan.with_backend(pattern_impl)
+        self.plan = plan
         self.schedule = schedule
-        self.pattern_impl = pattern_impl
+        self.pattern_impl = plan.backend if plan is not None \
+            else (pattern_impl or "pallas")
         self.eos_token = eos_token
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         self.pad_buckets = pad_buckets
@@ -163,17 +181,21 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self._active) or self.queued_count > 0
 
+    def possible_buckets(self) -> list[tuple[int, int]]:
+        """Every (dp, b) executable bucket this scheduler can produce —
+        straight from ``plan.buckets()`` (dense-only without a plan)."""
+        return self.plan.buckets() if self.plan is not None else [(1, 0)]
+
     def _pattern_for(self, req: Request, member: int) -> tuple:
         """Deterministic (dp, bias) for one ensemble member.
 
-        Plain requests (ensemble=1, no schedule) run dense (dp=1).  With a
-        schedule, member m of request r draws sample step m from a
-        per-request reseeded schedule — pure in (req.seed, m)."""
-        if self.schedule is None or req.ensemble <= 1:
+        Plain requests (ensemble=1, no plan) run dense (dp=1).  With a
+        plan, member m of request r draws sample step m from a per-request
+        reseeded plan — pure in (req.seed, m)."""
+        if self.plan is None or req.ensemble <= 1:
             return 1, 0
-        sched = dataclasses.replace(self.schedule, seed=req.seed)
-        pat, b = sched.sample(member)
-        return pat.dp, b
+        bound = self.plan.reseed(req.seed).sample(member)
+        return bound.dp, bound.bias
 
     def submit(self, req: Request, now: float = 0.0) -> bool:
         """Queue a request (all its ensemble members).  Returns False and
@@ -362,19 +384,18 @@ class Scheduler:
         replay produce identical streams."""
         return int(np.argmax(logits, -1))
 
-    def _pat(self, seq: Sequence) -> PatternArgs:
-        if seq.dp <= 1:
-            return NO_PATTERN
-        return PatternArgs(dp=seq.dp, bias=seq.bias,
-                           kind=self.cfg.pattern_kind,
-                           nb=self.cfg.pattern_nb, impl=self.pattern_impl)
+    def _pat(self, seq: Sequence) -> plan_mod.BoundPlan:
+        return self._bucket_pat(seq.bucket)
 
-    def _bucket_pat(self, bucket: tuple) -> PatternArgs:
+    def _bucket_pat(self, bucket: tuple) -> plan_mod.BoundPlan:
         dp, b = bucket
         if dp <= 1:
-            return NO_PATTERN
-        return PatternArgs(dp=dp, bias=b, kind=self.cfg.pattern_kind,
-                           nb=self.cfg.pattern_nb, impl=self.pattern_impl)
+            return plan_mod.IDENTITY
+        if self.plan is not None:
+            return self.plan.bind(dp, b)
+        return plan_mod.BoundPlan(family=self.cfg.pattern_kind, dp=dp,
+                                  bias=b, nb=self.cfg.pattern_nb,
+                                  backend=self.pattern_impl)
 
     def _decode_fn(self, bucket: tuple):
         key = ("decode", bucket)

@@ -15,14 +15,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
-from repro.core.sampler import PatternSchedule, identity_schedule
-from repro.models.layers import NO_PATTERN, PatternArgs
+from repro.core import plan as plan_mod
+from repro.core.plan import DropoutPlan, identity_plan
+from repro.core.sampler import PatternSchedule
 from repro.models.transformer import ModelConfig
 from repro.optim.optimizers import cosine_schedule
 from repro.train import checkpoint as ckpt_lib
@@ -74,12 +73,21 @@ class Trainer:
 
     def __init__(self, cfg: ModelConfig, optimizer, params,
                  schedule: Optional[PatternSchedule] = None,
-                 tcfg: TrainerConfig = TrainerConfig()):
+                 tcfg: TrainerConfig = TrainerConfig(),
+                 plan: Optional[DropoutPlan] = None):
         self.cfg = cfg
         self.optimizer = optimizer
         self.params = params
         self.opt_state = optimizer.init(params)
-        self.schedule = schedule or identity_schedule()
+        # DropoutPlan is the canonical configuration; a legacy
+        # ``schedule=PatternSchedule`` is lifted into a plan (shim), with
+        # nb pinned to the model's pattern blocking either way.
+        if plan is not None:
+            self.plan = plan.with_nb(cfg.pattern_nb)
+        elif schedule is not None:
+            self.plan = schedule.to_plan(nb=cfg.pattern_nb, backend="slice")
+        else:
+            self.plan = identity_plan(nb=cfg.pattern_nb)
         self.tcfg = tcfg
         self.lr_fn = cosine_schedule(tcfg.base_lr, tcfg.warmup, tcfg.steps)
         self._buckets: dict[tuple, Callable] = {}
@@ -92,9 +100,7 @@ class Trainer:
     def _step_fn(self, dp: int, bias: int) -> Callable:
         key = (dp, bias)
         if key not in self._buckets:
-            pat = (PatternArgs(dp=dp, bias=bias, kind=self.schedule.kind,
-                               nb=self.cfg.pattern_nb)
-                   if dp > 1 else NO_PATTERN)
+            pat = self.plan.bind(dp, bias) if dp > 1 else plan_mod.IDENTITY
             step = make_train_step(
                 self.cfg, self.optimizer,
                 microbatches=self.tcfg.microbatches, pat=pat,
@@ -128,8 +134,8 @@ class Trainer:
         until = until or self.tcfg.steps
         self.maybe_resume()
         for step in range(self.start_step, until):
-            pat, bias = self.schedule.sample(step)
-            fn = self._step_fn(pat.dp, bias)
+            bound = self.plan.sample(step)
+            fn = self._step_fn(bound.dp, bound.bias)
             batch = jax.tree.map(jax.numpy.asarray, batch_fn(step))
             t0 = time.perf_counter()
             self.params, self.opt_state, metrics = fn(
@@ -139,10 +145,11 @@ class Trainer:
             dt = time.perf_counter() - t0
             slow = self.watchdog.observe(dt)
             rec = {"step": step, "loss": float(metrics["loss"]),
-                   "dp": pat.dp, "bias": bias, "dt": dt, "straggler": slow}
+                   "dp": bound.dp, "bias": bound.bias, "dt": dt,
+                   "straggler": slow}
             self.history.append(rec)
             if step % self.tcfg.log_every == 0:
-                print(f"step {step}: loss={rec['loss']:.4f} dp={pat.dp} "
+                print(f"step {step}: loss={rec['loss']:.4f} dp={bound.dp} "
                       f"dt={dt*1e3:.0f}ms" + (" [STRAGGLER]" if slow else ""),
                       flush=True)
             self._maybe_checkpoint(step)

@@ -14,13 +14,10 @@ values — the compression the paper cites as compatible).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import NO_PATTERN, PatternArgs
+from repro.models.layers import NO_PATTERN
 from repro.models.transformer import ModelConfig, lm_loss
 from repro.optim.optimizers import clip_by_global_norm
 from repro.parallel.compression import terngrad_compress_decompress
@@ -33,7 +30,7 @@ def _split_micro(batch, m: int):
 
 
 def make_train_step(cfg: ModelConfig, optimizer, *, microbatches: int = 1,
-                    pat: PatternArgs = NO_PATTERN, clip_norm: float = 1.0,
+                    pat=NO_PATTERN, clip_norm: float = 1.0,
                     compress_grads: bool = False, acc_shardings=None):
     """``acc_shardings``: optional pytree of NamedShardings for the f32
     grad-accumulation buffers (normally the ZeRO-1 optimizer shardings).

@@ -16,8 +16,6 @@ try:  # pragma: no cover - exercised only where hypothesis is installed
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False
-
-    import functools
     import zlib
 
     import numpy as np

@@ -11,7 +11,7 @@ from repro.configs import ARCH_IDS, get_smoke
 from repro.data.pipeline import SyntheticLMData
 from repro.models import init_lm, materialize
 from repro.models.layers import NO_PATTERN, PatternArgs
-from repro.models.transformer import forward, lm_loss
+from repro.models.transformer import forward
 from repro.optim.optimizers import AdamW
 from repro.train.train_step import make_train_step
 

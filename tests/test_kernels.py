@@ -11,7 +11,6 @@ import numpy as np
 import pytest
 from tests._hyp import given, settings, strategies as st
 
-from repro.core import patterns as P
 from repro.kernels import ops, ref
 from repro.kernels.rdp_matmul import rdp_matmul_cols, rdp_matmul_rows
 from repro.kernels.tdp_matmul import tdp_matmul
@@ -184,6 +183,82 @@ def test_ops_tdp_pallas_vs_xla(dp):
     want = ops.tdp_mm(a, w, bias, dp=dp, use_pallas=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# Family registry: every registered family must agree across its declared
+# backends and match its own mask-multiply oracle (the DropoutPlan API
+# contract — new families get this coverage for free)
+# --------------------------------------------------------------------------
+
+def _family_ffn_setup(dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    d, dff = 256, 512
+    params = dict(w_up=_rand(ks[0], (d, dff), dtype),
+                  w_down=_rand(ks[1], (dff, d), dtype),
+                  w_gate=_rand(ks[2], (d, dff), dtype))
+    x = _rand(ks[3], (2, 4, d), dtype)
+    return params, x
+
+
+def _registered_active_families():
+    from repro.core.plan import FAMILIES
+    return sorted(n for n in FAMILIES if n != "identity")
+
+
+@pytest.mark.parametrize("family", _registered_active_families())
+@pytest.mark.parametrize("gated", [False, True])
+def test_every_family_backends_agree_with_oracle(family, gated):
+    """slice / gather / pallas must agree numerically under every
+    registered family, gated and ungated."""
+    from repro.core.plan import get_family
+    fam = get_family(family)
+    params, x = _family_ffn_setup()
+    kw = dict(dp=2, bias=1, nb=2, act=jax.nn.silu)
+    gate = params["w_gate"] if gated else None
+    want = fam.oracle_ffn(x, params["w_up"], params["w_down"], gate, **kw)
+    assert want is not None, f"{family}: register an oracle_ffn"
+    for backend in fam.backends:
+        got = fam.apply_ffn(x, params["w_up"], params["w_down"], gate,
+                            backend=backend, **kw)
+        # pallas accumulates per k-block in VMEM scratch; XLA in one dot —
+        # fp-associativity differences up to ~1e-4 are expected
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=1e-4, atol=1e-4,
+            err_msg=f"family={family} backend={backend} gated={gated}")
+
+
+@pytest.mark.parametrize("family,backends",
+                         [("rdp", ("slice", "gather", "pallas")),
+                          ("tdp", ("slice", "pallas"))])
+def test_layer_bias_distinct_and_backend_consistent(family, backends):
+    """The same BoundPlan must produce deterministic, layer-distinct
+    biases, and its backends must agree at every layer."""
+    from repro.core.plan import BoundPlan
+    from repro.models.layers import ffn_block
+    params, x = _family_ffn_setup()
+    outs = {}
+    for layer in range(4):
+        per_backend = []
+        for backend in backends:
+            bp = BoundPlan(family=family, dp=4, bias=1, nb=4,
+                           backend=backend)
+            assert bp.layer_bias(layer) == (1 + layer) % 4   # deterministic
+            per_backend.append(np.asarray(
+                ffn_block(params, x, bp, layer=layer), np.float32))
+        for a, b in zip(per_backend, per_backend[1:]):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4,
+                                       err_msg=f"layer={layer}")
+        outs[layer] = per_backend[0]
+    # distinct layers → distinct biases → distinct outputs
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.allclose(outs[i], outs[j]), (i, j)
+    # and re-running any layer reproduces it exactly (determinism)
+    bp = BoundPlan(family=family, dp=4, bias=1, nb=4, backend=backends[0])
+    again = np.asarray(ffn_block(params, x, bp, layer=2), np.float32)
+    np.testing.assert_array_equal(again, outs[2])
 
 
 def test_bias_is_traced_not_static():

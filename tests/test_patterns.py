@@ -94,3 +94,28 @@ def test_bad_inputs_raise():
         P.num_blocks(10, 3)
     with pytest.raises(ValueError):
         P.Pattern("rdp", 0)
+
+
+def test_plan_rejects_bad_bias_and_blocking_at_construction():
+    """b >= dp and nb % dp != 0 must fail when the pattern is *built*,
+    not later inside a kernel (which used to mis-slice or assert)."""
+    from repro.core.plan import BoundPlan, DropoutPlan
+    with pytest.raises(ValueError):
+        BoundPlan(family="rdp", dp=2, bias=2, nb=8)
+    with pytest.raises(ValueError):
+        BoundPlan(family="tdp", dp=4, bias=0, nb=6)
+    with pytest.raises(ValueError):
+        DropoutPlan(family="rdp", dist=(0.0, 0.0, 0.0, 1.0), nb=6)
+    # the valid neighbours construct fine
+    assert BoundPlan(family="rdp", dp=2, bias=1, nb=8).active
+    assert DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=8).support() == [1, 2]
+
+
+def test_legacy_patternargs_shim_validates_too():
+    from repro.models.layers import PatternArgs
+    with pytest.raises(ValueError):
+        PatternArgs(dp=4, bias=4, kind="rdp", nb=8)
+    with pytest.raises(ValueError):
+        PatternArgs(dp=4, bias=0, kind="rdp", nb=10)
+    with pytest.raises(ValueError):
+        PatternArgs(dp=2, bias=0, kind="rdp", nb=8, impl="palas")

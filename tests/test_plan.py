@@ -1,0 +1,361 @@
+"""DropoutPlan API: registries, construction-time validation, bias
+policies, shim equivalence (legacy PatternArgs/build_schedule must be
+bitwise-identical to the plan path), and the col_rdp demo family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import plan as plan_mod
+from repro.core.plan import (BACKENDS, FAMILIES, BoundPlan, DropoutPlan,
+                             LayerOverride, PatternFamily, as_bound,
+                             build_plan, get_family, identity_plan,
+                             register_backend, register_family)
+from repro.core.sampler import PatternSchedule, build_schedule
+from repro.models.layers import NO_PATTERN, PatternArgs, ffn_block
+
+
+# ==========================================================================
+# registries & construction-time validation
+# ==========================================================================
+
+def test_builtin_registries_populated():
+    assert {"slice", "gather", "pallas"} <= set(BACKENDS)
+    assert {"identity", "rdp", "tdp", "col_rdp"} <= set(FAMILIES)
+    assert {"layer_offset", "fixed", "layer_hash"} <= set(
+        plan_mod.BIAS_POLICIES)
+
+
+def test_backend_typo_raises_at_construction():
+    # the motivating bug: impl="palas" used to silently run the slice path
+    with pytest.raises(ValueError, match="palas"):
+        PatternArgs(dp=2, bias=0, kind="rdp", nb=8, impl="palas")
+    with pytest.raises(ValueError, match="backend"):
+        BoundPlan(family="rdp", dp=2, bias=0, nb=8, backend="palas")
+    with pytest.raises(ValueError, match="backend"):
+        DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=8, backend="palas")
+
+
+def test_unknown_family_raises():
+    with pytest.raises(ValueError, match="family"):
+        BoundPlan(family="rowcol", dp=2, bias=0, nb=8)
+    with pytest.raises(ValueError, match="family"):
+        PatternArgs(dp=2, bias=0, kind="rowcol", nb=8)
+    with pytest.raises(ValueError):
+        get_family("rowcol")
+
+
+def test_family_backend_compat_enforced():
+    # col_rdp has no pallas kernel: requesting it must fail loudly
+    with pytest.raises(ValueError, match="col_rdp"):
+        BoundPlan(family="col_rdp", dp=2, bias=0, nb=8, backend="pallas")
+    # tdp has no gather path
+    with pytest.raises(ValueError, match="tdp"):
+        DropoutPlan(family="tdp", dist=(0.5, 0.5), nb=8, backend="gather")
+
+
+def test_bias_out_of_range_rejected():
+    with pytest.raises(ValueError, match="bias"):
+        BoundPlan(family="rdp", dp=4, bias=4, nb=8)
+    with pytest.raises(ValueError, match="bias"):
+        BoundPlan(family="rdp", dp=4, bias=-1, nb=8)
+    with pytest.raises(ValueError, match="bias"):
+        PatternArgs(dp=4, bias=7, kind="rdp", nb=8)
+
+
+def test_non_divisible_block_count_rejected():
+    with pytest.raises(ValueError, match="divisible"):
+        BoundPlan(family="rdp", dp=3, bias=0, nb=128)
+    with pytest.raises(ValueError, match="divisible"):
+        PatternArgs(dp=3, bias=0, kind="rdp", nb=128)
+    # plan-level: support {3} does not divide nb=8
+    with pytest.raises(ValueError, match="divisible"):
+        DropoutPlan(family="rdp", dist=(0.0, 0.0, 1.0), nb=8)
+
+
+def test_plan_bind_validates():
+    plan = DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=8)
+    with pytest.raises(ValueError):
+        plan.bind(2, 5)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("slice")
+    with pytest.raises(ValueError, match="already registered"):
+        @register_family
+        class AnotherRdp(PatternFamily):
+            name = "rdp"
+
+
+def test_register_new_family_is_one_decorator():
+    @register_family
+    class EveryOther(PatternFamily):
+        name = "_test_every_other"
+        backends = ("slice",)
+    try:
+        assert get_family("_test_every_other").name == "_test_every_other"
+        bp = BoundPlan(family="_test_every_other", dp=2, bias=0, nb=8)
+        assert bp.active and bp.bucket == (2, 0)
+    finally:
+        del FAMILIES["_test_every_other"]
+
+
+# ==========================================================================
+# sampling & buckets — shim equivalence
+# ==========================================================================
+
+def test_build_schedule_forwards_to_build_plan():
+    sched = build_schedule("rdp", 0.5, n_units_blocks=8, dp_max=8,
+                           block=16, seed=3)
+    plan = build_plan("rdp", 0.5, nb=8, dp_max=8, block=16, seed=3)
+    np.testing.assert_allclose(np.asarray(sched.dist),
+                               np.asarray(plan.dist), rtol=0, atol=0)
+    assert sched.support() == plan.support()
+    assert sched.expected_flop_fraction() == plan.expected_flop_fraction()
+    for t in range(300):
+        pat, b = sched.sample(t)
+        bound = plan.sample(t)
+        assert (pat.dp, b) == (bound.dp, bound.bias), t
+
+
+def test_schedule_to_plan_samples_identically():
+    sched = PatternSchedule(kind="rdp", dist=np.array([0.3, 0.4, 0.0, 0.3]),
+                            block=4, seed=11)
+    plan = sched.to_plan(nb=8)
+    for t in range(200):
+        pat, b = sched.sample(t)
+        bound = plan.sample(t)
+        assert (pat.dp, b) == (bound.dp, bound.bias), t
+
+
+def test_buckets_enumerate_dp_bias_pairs():
+    plan = DropoutPlan(family="rdp", dist=(0.4, 0.3, 0.0, 0.3), nb=8)
+    assert plan.buckets() == [(1, 0), (2, 0), (2, 1),
+                              (4, 0), (4, 1), (4, 2), (4, 3)]
+    assert identity_plan().buckets() == [(1, 0)]
+    # every sample lands in a declared bucket
+    buckets = set(plan.buckets())
+    for t in range(100):
+        assert plan.sample(t).bucket in buckets
+
+
+def test_sample_accepts_external_rng():
+    plan = DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=8, seed=0)
+    rng = np.random.default_rng(0)
+    draws = {plan.sample(rng=rng).bucket for _ in range(50)}
+    assert draws <= set(plan.buckets())
+    with pytest.raises(ValueError):
+        plan.sample()
+
+
+# ==========================================================================
+# bias policies & per-layer overrides
+# ==========================================================================
+
+def test_layer_offset_policy_matches_legacy_layer_bias():
+    pa = PatternArgs(dp=4, bias=2, kind="rdp", nb=8)
+    bp = as_bound(pa)
+    for layer in range(10):
+        legacy = (2 + layer) % 4
+        assert pa.layer_bias(layer) == legacy
+        assert bp.layer_bias(layer) == legacy
+
+
+def test_bias_policies_deterministic_and_layer_distinct():
+    for policy in plan_mod.BIAS_POLICIES:
+        bp = BoundPlan(family="rdp", dp=4, bias=1, nb=8, bias_policy=policy)
+        seq1 = [bp.layer_bias(layer) for layer in range(8)]
+        seq2 = [bp.layer_bias(layer) for layer in range(8)]
+        assert seq1 == seq2, policy                       # deterministic
+        assert all(0 <= b < 4 for b in seq1), policy      # in range
+    off = BoundPlan(family="rdp", dp=4, bias=1, nb=8,
+                    bias_policy="layer_offset")
+    # layer_offset walks every bias across dp consecutive layers
+    assert sorted(off.layer_bias(layer) for layer in range(4)) == [0, 1, 2, 3]
+    fixed = BoundPlan(family="rdp", dp=4, bias=1, nb=8, bias_policy="fixed")
+    assert {fixed.layer_bias(layer) for layer in range(8)} == {1}
+
+
+def test_unknown_bias_policy_rejected():
+    with pytest.raises(ValueError, match="policy"):
+        BoundPlan(family="rdp", dp=2, bias=0, nb=8, bias_policy="nope")
+
+
+def test_layer_overrides_pin_bias_and_switch_off():
+    bp = BoundPlan(family="rdp", dp=4, bias=0, nb=8,
+                   layer_overrides={2: LayerOverride(bias=3),
+                                    5: LayerOverride(off=True)})
+    assert bp.layer_bias(0) == 0
+    assert bp.layer_bias(2) == 3                 # pinned
+    assert bp.layer_bias(1) == 1                 # policy elsewhere
+    assert not bp.for_layer(5).active            # off → identity
+    assert bp.for_layer(2).bias == 3
+    assert bp.for_layer(2).active
+    # override bias is validated against dp too
+    with pytest.raises(ValueError, match="override"):
+        BoundPlan(family="rdp", dp=4, bias=0, nb=8,
+                  layer_overrides={0: LayerOverride(bias=9)})
+
+
+def test_plan_threads_overrides_through_bind():
+    plan = DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=8,
+                       bias_policy="fixed",
+                       layer_overrides={1: LayerOverride(off=True)})
+    bound = plan.bind(2, 1)
+    assert bound.bias_policy == "fixed"
+    assert not bound.for_layer(1).active
+    assert bound.for_layer(0).bias == 1
+
+
+# ==========================================================================
+# shim equivalence: legacy call path vs plan call path, bitwise
+# ==========================================================================
+
+def _ffn_setup(d=64, dff=256, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    params = {"w_up": jax.random.normal(ks[0], (d, dff), dtype) * 0.1,
+              "w_down": jax.random.normal(ks[1], (dff, d), dtype) * 0.1,
+              "w_gate": jax.random.normal(ks[2], (d, dff), dtype) * 0.1}
+    x = jax.random.normal(ks[3], (2, 6, d), dtype)
+    return params, x
+
+
+@pytest.mark.parametrize("kind,impl", [("rdp", "slice"), ("rdp", "gather"),
+                                       ("rdp", "pallas"), ("tdp", "slice")])
+def test_ffn_block_patternargs_vs_boundplan_bitwise(kind, impl):
+    params, x = _ffn_setup()
+    legacy = ffn_block(params, x,
+                       PatternArgs(dp=2, bias=1, kind=kind, nb=8, impl=impl),
+                       layer=1)
+    plan = DropoutPlan(family=kind, dist=(0.0, 1.0), nb=8, backend=impl)
+    new = ffn_block(params, x, plan.bind(2, 1), layer=1)
+    assert np.array_equal(np.asarray(legacy), np.asarray(new)), (kind, impl)
+
+
+def test_forward_patternargs_vs_boundplan_bitwise():
+    from repro.configs import get_smoke
+    from repro.models import init_lm, materialize
+    from repro.models.transformer import forward
+    cfg = get_smoke("qwen2_1_5b")
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    legacy, _ = forward(cfg, params, toks,
+                        PatternArgs(dp=2, bias=1, kind="rdp",
+                                    nb=cfg.pattern_nb))
+    plan = DropoutPlan(family="rdp", dist=(0.0, 1.0), nb=cfg.pattern_nb)
+    new, _ = forward(cfg, params, toks, plan.bind(2, 1))
+    assert np.array_equal(np.asarray(legacy), np.asarray(new))
+    # and NO_PATTERN == identity binding
+    dense_legacy, _ = forward(cfg, params, toks, NO_PATTERN)
+    dense_new, _ = forward(cfg, params, toks, identity_plan().identity())
+    assert np.array_equal(np.asarray(dense_legacy), np.asarray(dense_new))
+
+
+def test_scheduler_legacy_schedule_vs_plan_identical_streams():
+    """The serve runtime must produce the same token streams whether it is
+    configured through the legacy (schedule, pattern_impl) pair or the
+    canonical DropoutPlan."""
+    from repro.configs import get_smoke
+    from repro.models import init_lm, materialize
+    from repro import serve
+    cfg = get_smoke("qwen2_1_5b")
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    rng = np.random.default_rng(7)
+    reqs = [serve.Request(rid=i, prompt=rng.integers(0, 500, 6).astype(np.int32),
+                          max_new_tokens=3, ensemble=2, seed=i)
+            for i in range(2)]
+
+    def run(**kw):
+        sched = serve.Scheduler(cfg, params, capacity=4, max_len=16, **kw)
+        # both configuration styles expose the same bucket universe
+        assert sched.possible_buckets() == sched.plan.buckets()
+        for r in reqs:
+            assert sched.submit(r)
+        while sched.has_work:
+            sched.step()
+        return {rid: [tuple(m["tokens"]) for m in ms]
+                for rid, ms in sched.completed.items()}
+
+    legacy_sched = PatternSchedule(kind="rdp", dist=np.array([0.0, 1.0]),
+                                   block=32)
+    legacy = run(schedule=legacy_sched, pattern_impl="pallas")
+    plan = legacy_sched.to_plan(nb=cfg.pattern_nb, backend="pallas")
+    new = run(plan=plan)
+    assert legacy == new
+
+
+# ==========================================================================
+# the col_rdp demo family
+# ==========================================================================
+
+def test_col_rdp_backends_agree_and_match_oracle():
+    fam = get_family("col_rdp")
+    params, x = _ffn_setup()
+    kw = dict(dp=2, bias=1, nb=8, act=jax.nn.silu)
+    want = fam.oracle_ffn(x, params["w_up"], params["w_down"],
+                          params["w_gate"], **kw)
+    for backend in fam.backends:
+        got = fam.apply_ffn(x, params["w_up"], params["w_down"],
+                            params["w_gate"], backend=backend, **kw)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_col_rdp_through_model_forward():
+    """Registering the demo family needed no edits outside core/plan.py +
+    its own module — yet the whole model stack can run it."""
+    from repro.configs import get_smoke
+    from repro.models import init_lm, materialize
+    from repro.models.transformer import forward
+    cfg = get_smoke("qwen2_1_5b")
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    toks = jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    plan = DropoutPlan(family="col_rdp", dist=(0.0, 1.0), nb=cfg.pattern_nb)
+    logits, _ = forward(cfg, params, toks, plan.bind(2, 0))
+    dense, _ = forward(cfg, params, toks, NO_PATTERN)
+    assert np.isfinite(np.asarray(logits)).all()
+    # the pattern actually changes the computation
+    assert not np.allclose(np.asarray(logits), np.asarray(dense))
+
+
+def test_col_rdp_drops_input_columns():
+    """col_rdp must be invariant to the *dropped* input features."""
+    fam = get_family("col_rdp")
+    params, x = _ffn_setup()
+    kw = dict(dp=2, bias=1, nb=8, backend="slice", act=jax.nn.silu)
+    out = fam.apply_ffn(x, params["w_up"], params["w_down"],
+                        params["w_gate"], **kw)
+    # zero out the dropped input blocks: block j kept iff j % 2 == 1
+    d = x.shape[-1]
+    mask = (np.arange(d) // (d // 8)) % 2 == 1
+    x2 = jnp.where(jnp.asarray(mask), x, 7.7)     # perturb dropped features
+    out2 = fam.apply_ffn(x2, params["w_up"], params["w_down"],
+                         params["w_gate"], **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ==========================================================================
+# misc plan surface
+# ==========================================================================
+
+def test_as_bound_normalization():
+    assert as_bound(None) is plan_mod.IDENTITY
+    bp = BoundPlan(family="rdp", dp=2, bias=0, nb=8)
+    assert as_bound(bp) is bp
+    pa = PatternArgs(dp=2, bias=0, kind="rdp", nb=8, impl="gather")
+    assert as_bound(pa) == dataclasses.replace(bp, backend="gather")
+    with pytest.raises(TypeError):
+        as_bound(42)
+
+
+def test_plan_rate_and_flops():
+    plan = DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=8)
+    assert plan.expected_rate() == pytest.approx(0.25)
+    assert plan.expected_flop_fraction() == pytest.approx(0.75)
+    assert plan.bind(2, 0).flop_fraction == 0.5

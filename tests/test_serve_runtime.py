@@ -2,7 +2,6 @@
 fairness, pattern-bucketed MC-dropout ensembles, deterministic replay, and
 the engine primitives they build on (ragged decode, chunked prefill,
 pattern plumbing)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ dropout accuracy; (4) the whole thing is deterministic and restartable.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import patterns as P
 from repro.core.sampler import build_schedule

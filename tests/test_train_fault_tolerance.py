@@ -1,9 +1,5 @@
 """Trainer behaviour: pattern bucketing, checkpoint/restart, straggler
 watchdog, gradient compression — the fault-tolerance contract."""
-import json
-import shutil
-import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -11,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke
-from repro.core.sampler import PatternSchedule, build_schedule
+from repro.core.sampler import build_schedule
 from repro.data.pipeline import SyntheticLMData
 from repro.models import init_lm, materialize
 from repro.optim.optimizers import AdamW
