@@ -1,8 +1,24 @@
-"""Shared benchmark utilities: timing, CSV emit, training drivers for the
-paper's MLP / LSTM models under the three dropout modes."""
+"""Shared benchmark utilities: timing, result emission (CSV + the
+``BENCH_*.json`` schema), and training drivers for the paper's MLP / LSTM
+models under the three dropout modes.
+
+BENCH_*.json schema (``bench_record`` / ``write_json``, documented in
+benchmarks/README.md): every bench script emits one JSON object with
+
+    bench    str   — bench name ("serve" | "train" | "kernel" | ...)
+    arch     str?  — architecture id, or null for arch-free micro-benches
+    backend  str   — the JAX platform the numbers were measured on
+    config   dict  — every knob that shaped the run (CLI args, plan info)
+    ...            — bench-specific result keys (rows, telemetry, ...)
+
+Keeping the envelope uniform lets the README's paper-claims table point at
+one file per claim and lets CI smoke-assert on any bench the same way.
+"""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 from typing import Callable
 
 import jax
@@ -26,6 +42,7 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 
 def emit(rows: list[dict], path: str | None = None):
+    """Print rows as CSV and optionally write them to ``path``."""
     if not rows:
         return
     cols = list(rows[0])
@@ -35,9 +52,26 @@ def emit(rows: list[dict], path: str | None = None):
     text = "\n".join(lines)
     print(text, flush=True)
     if path:
-        from pathlib import Path
         Path(path).parent.mkdir(parents=True, exist_ok=True)
         Path(path).write_text(text + "\n")
+
+
+def bench_record(bench: str, *, arch: str | None = None,
+                 config: dict | None = None, **results) -> dict:
+    """Assemble one BENCH_*.json record (schema above)."""
+    rec = {"bench": bench, "arch": arch,
+           "backend": jax.default_backend(), "config": dict(config or {})}
+    rec.update(results)
+    return rec
+
+
+def write_json(path: str, record: dict) -> None:
+    """Write a BENCH_*.json record (pretty-printed, trailing newline)."""
+    p = Path(path)
+    if p.parent != Path("."):
+        p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(record, indent=2) + "\n")
+    print(f"wrote {path}")
 
 
 # --------------------------------------------------------------------------

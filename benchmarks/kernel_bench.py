@@ -1,8 +1,22 @@
-"""Kernel micro-bench: FLOP fraction + wall time of compact vs dense matmul.
+"""Kernel micro-bench: compact vs mask-multiply FFN across the registries.
 
-The TPU win is structural (1/dp of the FLOPs and weight DMA); on CPU we
-report measured wall-time of the XLA compact path vs the dense+mask path,
-plus the exact FLOP fractions the dry-run confirms.
+Sweeps every registered pattern family (``core.plan.FAMILIES``) over every
+backend the family declares ("slice" / "gather" / "pallas"), timing the
+compact ``apply_ffn`` against the family's own mask-multiply
+``oracle_ffn`` — the thing conventional frameworks execute.  Because the
+sweep is registry-driven, a newly registered family or backend is
+benchmarked with zero edits here (the same property the agreement tests in
+tests/test_kernels.py exploit).
+
+The TPU win is structural (1/dp of the FLOPs and weight DMA on the matmuls
+the family patterns); on CPU we report measured wall-time of the XLA
+compact paths vs the masked path.  The Pallas backend runs interpret-mode
+on CPU — numerically identical but not a meaningful wall-time, so it is
+skipped off-TPU unless ``--include-pallas`` is passed (skips are printed,
+never silent).
+
+Run:  PYTHONPATH=src python -m benchmarks.kernel_bench [--quick]
+      [--include-pallas] [--out rows.csv] [--json BENCH_kernel.json]
 """
 from __future__ import annotations
 
@@ -11,10 +25,17 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core.dropout import (rdp_ffn_apply, rdp_ffn_oracle,
-                                tdp_matmul_apply, tdp_matmul_oracle)
+from repro.core.plan import FAMILIES
 
-from .common import emit, time_fn
+from .common import bench_record, emit, time_fn, write_json
+
+
+def _setup(m, d, ff):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (m, d), jnp.float32)
+    w_up = jax.random.normal(ks[1], (d, ff), jnp.float32) * 0.02
+    w_dn = jax.random.normal(ks[2], (ff, d), jnp.float32) * 0.02
+    return x, w_up, w_dn
 
 
 def main(argv=None):
@@ -22,44 +43,66 @@ def main(argv=None):
     ap.add_argument("--m", type=int, default=512)
     ap.add_argument("--d", type=int, default=1024)
     ap.add_argument("--ff", type=int, default=4096)
+    ap.add_argument("--nb", type=int, default=8,
+                    help="pattern blocks (dp must divide; 8 admits dp<=8)")
+    ap.add_argument("--dps", default="1,2,4,8")
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--include-pallas", action="store_true",
+                    help="time the interpret-mode Pallas backend off-TPU")
+    ap.add_argument("--out", default=None, help="optional CSV path")
+    ap.add_argument("--json", default="BENCH_kernel.json")
     args = ap.parse_args(argv)
     m, d, ff = (128, 256, 1024) if args.quick else (args.m, args.d, args.ff)
+    nb = args.nb
+    dps = [int(s) for s in args.dps.split(",")]
 
-    ks = jax.random.split(jax.random.PRNGKey(0), 4)
-    x = jax.random.normal(ks[0], (m, d), jnp.float32)
-    w_up = jax.random.normal(ks[1], (d, ff), jnp.float32) * 0.02
-    w_dn = jax.random.normal(ks[2], (ff, d), jnp.float32) * 0.02
+    x, w_up, w_dn = _setup(m, d, ff)
+    on_tpu = jax.default_backend() == "tpu"
+    act = jax.nn.silu
 
-    ffn_mask = jax.jit(lambda x: rdp_ffn_oracle(x, w_up, w_dn, 2, 0))
     rows = []
-    for dp in (1, 2, 4, 8):
-        compact = jax.jit(lambda x, dp=dp: rdp_ffn_apply(
-            x, w_up, w_dn, dp, 0, block=128))
-        masked = jax.jit(lambda x, dp=dp: rdp_ffn_oracle(
-            x, w_up, w_dn, dp, 0, block=128))
-        t_c = time_fn(compact, x)
-        t_m = time_fn(masked, x)
-        rows.append({"op": "rdp_ffn", "dp": dp,
-                     "flop_fraction": round(1.0 / dp, 4),
-                     "t_compact_us": round(t_c * 1e6, 1),
-                     "t_masked_us": round(t_m * 1e6, 1),
-                     "speedup": round(t_m / t_c, 3)})
-    for dp in (1, 2, 4):
-        tile = min(128, d // 8)      # keep dp | (d/tile) for all dp swept
-        compact = jax.jit(lambda x, dp=dp: tdp_matmul_apply(
-            x, w_up, dp, 0, tile=tile))
-        masked = jax.jit(lambda x, dp=dp: tdp_matmul_oracle(
-            x, w_up, dp, 0, tile=tile))
-        t_c = time_fn(compact, x)
-        t_m = time_fn(masked, x)
-        rows.append({"op": "tdp_matmul", "dp": dp,
-                     "flop_fraction": round(1.0 / dp, 4),
-                     "t_compact_us": round(t_c * 1e6, 1),
-                     "t_masked_us": round(t_m * 1e6, 1),
-                     "speedup": round(t_m / t_c, 3)})
+    for fname in sorted(FAMILIES):
+        if fname == "identity":
+            continue                     # dp=1 rows below are the baseline
+        fam = FAMILIES[fname]
+        for backend in fam.backends:
+            if backend == "pallas" and not on_tpu and not args.include_pallas:
+                print(f"[skip] {fname}/pallas: interpret-mode wall time is "
+                      f"not meaningful off-TPU (--include-pallas to force)",
+                      flush=True)
+                continue
+            for dp in dps:
+                try:
+                    fam.validate(nb, dp)
+                except ValueError as e:
+                    print(f"[skip] {fname}/{backend} dp={dp}: {e}",
+                          flush=True)
+                    continue
+                bias = min(1, dp - 1)
+                kw = dict(dp=dp, bias=bias, nb=nb, act=act)
+                compact = jax.jit(lambda x, kw=kw, backend=backend, fam=fam:
+                                  fam.apply_ffn(x, w_up, w_dn, None,
+                                                backend=backend, **kw))
+                masked = jax.jit(lambda x, kw=kw, fam=fam:
+                                 fam.oracle_ffn(x, w_up, w_dn, None, **kw))
+                t_c = time_fn(compact, x)
+                t_m = time_fn(masked, x)
+                rows.append({
+                    "family": fname, "backend": backend, "dp": dp,
+                    "pattern_matmul_flop_fraction": round(1.0 / dp, 4),
+                    "t_compact_us": round(t_c * 1e6, 1),
+                    "t_masked_us": round(t_m * 1e6, 1),
+                    "speedup": round(t_m / t_c, 3),
+                })
     emit(rows, args.out)
+    if args.json:
+        write_json(args.json, bench_record(
+            "kernel",
+            config={"m": m, "d": d, "ff": ff, "nb": nb, "dps": dps,
+                    "families": sorted(f for f in FAMILIES
+                                       if f != "identity"),
+                    "include_pallas": bool(args.include_pallas or on_tpu)},
+            rows=rows))
     return rows
 
 

@@ -8,7 +8,8 @@ Suites:
   table2      LSTM dropout sweep (paper Table II)
   batch       LSTM batch-size scaling (paper Fig. 6b)
   search      Algorithm 1 cost/quality
-  kernels     compact-vs-masked matmul micro-bench
+  kernels     compact-vs-masked matmul micro-bench (registry backends)
+  train       dense-vs-compact train-step bench (emits BENCH_train.json)
   roofline    aggregate dry-run roofline table (needs experiments/dryrun)
 
 Default is reduced-scale (CI-friendly on this single-core container);
@@ -29,11 +30,13 @@ def main(argv=None):
                          "archived full-scale outputs)")
     args = ap.parse_args(argv)
 
-    from . import kernel_bench, paper_lstm, paper_mlp, roofline, search_bench
+    from . import (kernel_bench, paper_lstm, paper_mlp, roofline,
+                   search_bench, train_bench)
     q = [] if args.full else ["--quick"]
     suites = {
         "search": lambda: search_bench.main(q),
         "kernels": lambda: kernel_bench.main(q),
+        "train": lambda: train_bench.main(q),
         "fig4": lambda: paper_mlp.main(q),
         "table1": lambda: paper_mlp.main(["--table1"] + q),
         "table2": lambda: paper_lstm.main(q),

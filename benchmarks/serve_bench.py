@@ -12,9 +12,7 @@ Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--arch qwen2-1-5b]
       [--ensemble-prob 0.5] [--out BENCH_serve.json]
 """
 import argparse
-import json
 import time
-from pathlib import Path
 
 import jax
 
@@ -22,6 +20,11 @@ from repro.configs import get_smoke, normalize
 from repro.core.plan import build_plan
 from repro.models import init_lm, materialize
 from repro import serve
+
+try:
+    from .common import bench_record, write_json
+except ImportError:                      # run as a script, not a module
+    from common import bench_record, write_json
 
 
 def run_bench(args) -> dict:
@@ -60,11 +63,9 @@ def run_bench(args) -> dict:
                 "disagreement": agg["disagreement"],
                 "mean_ffn_flop_fraction": agg["mean_ffn_flop_fraction"],
             }
-    return {
-        "bench": "serve",
-        "arch": normalize(args.arch),
-        "backend": jax.default_backend(),
-        "config": {
+    return bench_record(
+        "serve", arch=normalize(args.arch),
+        config={
             "n_requests": args.n_requests, "rate_req_s": args.rate,
             "capacity": args.capacity, "prefill_chunk": args.prefill_chunk,
             "max_queue": args.max_queue, "ensemble": args.ensemble,
@@ -74,10 +75,9 @@ def run_bench(args) -> dict:
             "schedule_support_dp": plan.support(),
             "plan_buckets": scheduler.possible_buckets(),
         },
-        "wall_s": wall,
-        "telemetry": telemetry,
-        "ensembles": ensembles,
-    }
+        wall_s=wall,
+        telemetry=telemetry,
+        ensembles=ensembles)
 
 
 def main():
@@ -120,8 +120,7 @@ def main():
     print(f"pattern buckets (tokens): {t['bucket_tokens']}")
     print(f"mean FFN FLOP fraction vs dense: "
           f"{t['mean_ffn_flop_fraction']:.3f}")
-    Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
-    print(f"wrote {args.out}")
+    write_json(args.out, result)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,184 @@
+"""Training benchmark: dense-vs-compact step time + fwd/bwd FLOP accounting.
+
+The paper's headline claim is a 20–77% reduction in *training* time
+(Table I/II), which requires the sampled pattern to shrink the FFN matmuls
+in BOTH passes — forward, dgrad and wgrad (Fig. 3 step 4).  This bench
+drives real ``make_train_step`` executables (fwd + bwd + optimizer) per
+``dp`` bucket and emits ``BENCH_train.json`` with:
+
+* measured step wall-time per dp, dense (dp=1) as baseline;
+* the analytic pattern-matmul FLOP fraction per pass — compact FFN FLOPs /
+  dense FFN FLOPs, separately for forward and backward (dgrad + wgrad).
+  With ``nb % dp == 0`` both are exactly 1/dp: the acceptance invariant;
+* XLA's whole-step measured FLOPs via ``compiled.cost_analysis()`` when
+  the platform reports it (attention/embedding dilute the model-level
+  ratio below 1/dp — the FFN-level fraction is the paper's claim).
+
+Run:  PYTHONPATH=src python benchmarks/train_bench.py
+      [--arch qwen2-1-5b] [--backend slice|gather|pallas] [--dps 1,2,4,8]
+      [--steps 8] [--batch 4] [--seq 64] [--out BENCH_train.json]
+
+Note on backends: "slice" is the XLA training default and what you want
+for wall-time numbers on CPU; "pallas" exercises the custom-VJP compact
+kernels (kernels/autodiff.py) in interpret mode on CPU — numerically the
+point, but interpret-mode wall time is not meaningful.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke, normalize
+from repro.core.plan import DropoutPlan, get_family
+from repro.data.pipeline import SyntheticLMData
+from repro.models import init_lm, materialize
+from repro.models.transformer import ModelConfig
+from repro.optim.optimizers import AdamW
+from repro.train.train_step import make_train_step
+
+try:
+    from .common import bench_record, write_json
+except ImportError:                      # run as a script, not a module
+    from common import bench_record, write_json
+
+
+def ffn_pattern_flops(cfg: ModelConfig, batch: int, seq: int,
+                      dp: int) -> dict:
+    """Analytic FLOPs of the pattern-touched FFN matmuls for one step.
+
+    Dense layers run a gated FFN: up + gate ([B·S, d] @ [d, f/dp]) and
+    down ([B·S, f/dp] @ [f/dp, d]).  Backward doubles each matmul (dgrad +
+    wgrad are each the same 2·M·N·K as the forward, contracted on
+    different axes).  MoE/SSM archs are handled by the same 1/dp argument
+    on their pattern-touched matmuls; this helper covers the dense FFN
+    case the bench sweeps.
+    """
+    tokens = batch * seq
+    n_ffn = sum(1 for i in range(cfg.n_layers)
+                if cfg.layer_kind(i) == "dense")
+    per_matmul = 2 * tokens * cfg.d_model * cfg.d_ff    # dense fwd, 1 matmul
+    n_matmuls = 3                                       # up, gate, down
+    dense_fwd = n_ffn * n_matmuls * per_matmul
+    dense_bwd = 2 * dense_fwd                           # dgrad + wgrad
+    return {
+        "dense_fwd": dense_fwd,
+        "dense_bwd": dense_bwd,
+        "compact_fwd": dense_fwd // dp,
+        "compact_bwd": dense_bwd // dp,
+    }
+
+
+def _measured_step_flops(compiled) -> float | None:
+    """Whole-step FLOPs from XLA's cost analysis, when reported."""
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else None
+        if ca and "flops" in ca:
+            return float(ca["flops"])
+    except Exception:
+        pass
+    return None
+
+
+def run_bench(args) -> dict:
+    cfg = get_smoke(normalize(args.arch))
+    family = get_family(args.family)
+    params0 = materialize(jax.random.PRNGKey(args.seed), init_lm(cfg)[0])
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=args.seq,
+                           global_batch=args.batch, seed=args.seed)
+    optimizer = AdamW()
+    dps = [int(d) for d in args.dps.split(",")]
+    for dp in dps:
+        family.validate(cfg.pattern_nb, dp)
+
+    rows = []
+    dense_t = None
+    for dp in dps:
+        # uniform point-mass plan at this dp: bind bucket (dp, 0) — step
+        # time is bias-independent (one executable per dp, traced bias)
+        dist = tuple(1.0 if i + 1 == dp else 0.0 for i in range(max(dps)))
+        plan = DropoutPlan(family=args.family, dist=dist, nb=cfg.pattern_nb,
+                           block=cfg.d_ff // cfg.pattern_nb,
+                           backend=args.backend, seed=args.seed)
+        bound = plan.bind(dp, 0) if dp > 1 else plan.identity()
+        step = jax.jit(make_train_step(cfg, optimizer, pat=bound))
+
+        params = jax.tree.map(jnp.copy, params0)
+        opt_state = optimizer.init(params)
+        lr = jnp.float32(1e-3)
+        times = []
+        for i in range(args.warmup + args.steps):
+            batch = jax.tree.map(jnp.asarray, data.batch(i))
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step(params, opt_state, batch, lr)
+            jax.block_until_ready(metrics["loss"])
+            if i >= args.warmup:
+                times.append(time.perf_counter() - t0)
+        t_med = float(np.median(times))
+        if dp == 1:
+            dense_t = t_med
+
+        fl = ffn_pattern_flops(cfg, args.batch, args.seq, dp)
+        # reuse the already-jitted step: .lower().compile() hits its cache
+        lowered = step.lower(params, opt_state, batch, lr)
+        rows.append({
+            "dp": dp,
+            "step_time_ms": round(t_med * 1e3, 2),
+            "speedup_vs_dense": (round(dense_t / t_med, 3)
+                                 if dense_t else None),
+            "loss_final": float(metrics["loss"]),
+            "ffn_fwd_flop_fraction": fl["compact_fwd"] / fl["dense_fwd"],
+            "ffn_bwd_flop_fraction": fl["compact_bwd"] / fl["dense_bwd"],
+            "ffn_fwd_bwd_flop_fraction":
+                (fl["compact_fwd"] + fl["compact_bwd"])
+                / (fl["dense_fwd"] + fl["dense_bwd"]),
+            "step_flops_measured": _measured_step_flops(lowered.compile()),
+        })
+        r = rows[-1]
+        print(f"dp={dp}: step {r['step_time_ms']:.1f}ms "
+              f"(x{r['speedup_vs_dense']} vs dense)  "
+              f"ffn fwd+bwd FLOP fraction {r['ffn_fwd_bwd_flop_fraction']:.3f}",
+              flush=True)
+
+    return bench_record(
+        "train", arch=normalize(args.arch),
+        config={"backend": args.backend, "family": args.family,
+                "dps": dps, "steps": args.steps, "warmup": args.warmup,
+                "batch": args.batch, "seq": args.seq, "seed": args.seed,
+                "pattern_nb": cfg.pattern_nb, "n_layers": cfg.n_layers,
+                "d_model": cfg.d_model, "d_ff": cfg.d_ff},
+        rows=rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1-5b")
+    ap.add_argument("--backend", default="slice",
+                    choices=["slice", "gather", "pallas"])
+    ap.add_argument("--family", default="rdp")
+    ap.add_argument("--dps", default="1,2,4,8",
+                    help="comma-separated dp sweep (1 = dense baseline)")
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sweep for CI smoke")
+    ap.add_argument("--out", default="BENCH_train.json")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.dps, args.steps, args.batch, args.seq = "1,2", 3, 2, 32
+
+    record = run_bench(args)
+    write_json(args.out, record)
+    return record
+
+
+if __name__ == "__main__":
+    main()

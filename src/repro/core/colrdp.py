@@ -37,6 +37,7 @@ class ColRdpFamily(PatternFamily):
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
+        """Compact FFN over kept *input* features (slice/gather)."""
         take = _gather_blocks if backend == "gather" else _slice_blocks
         xc = take(x, x.ndim - 1, nb, dp, bias)          # [..., d_in/dp]
         w_up_c = take(w_up, 0, nb, dp, bias)            # [d_in/dp, d_ff]
@@ -50,6 +51,7 @@ class ColRdpFamily(PatternFamily):
         return h @ w_down
 
     def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        """Mask-multiply reference: x masked+scaled over the input dim."""
         block = w_up.shape[0] // nb
         mask = P.rdp_mask(w_up.shape[0], dp, bias, block, x.dtype)
         xm = x * mask * dp

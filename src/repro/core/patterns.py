@@ -59,6 +59,7 @@ class Pattern:
 
     @property
     def keep_fraction(self) -> float:
+        """Fraction of units this pattern keeps (1/dp)."""
         return 1.0 / self.dp
 
     @property
@@ -73,6 +74,7 @@ class Pattern:
 
 
 def num_blocks(dim: int, block: int) -> int:
+    """Block count of a dimension; raises unless ``block`` divides it."""
     if dim % block != 0:
         raise ValueError(f"dim {dim} not divisible by block {block}")
     return dim // block

@@ -56,20 +56,31 @@ from .search import SearchConfig, search_distribution
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
-    """One execution strategy for compact pattern matmuls."""
+    """One execution strategy for compact pattern matmuls.
+
+    ``differentiable`` declares that ``jax.grad`` flows through the
+    backend's pattern matmuls — either via XLA autodiff ("slice"/"gather")
+    or via registered custom-VJP kernels ("pallas", kernels/autodiff.py).
+    Every registered backend is currently trainable; the flag exists so a
+    future inference-only backend (e.g. a quantized decode kernel) can
+    declare itself and be rejected by the Trainer instead of failing deep
+    inside ``jax.grad``.
+    """
 
     name: str
     doc: str = ""
+    differentiable: bool = True
 
 
 BACKENDS: dict[str, Backend] = {}
 
 
-def register_backend(name: str, doc: str = "") -> Backend:
+def register_backend(name: str, doc: str = "", *,
+                     differentiable: bool = True) -> Backend:
     """Register an execution backend.  Raises on duplicates."""
     if name in BACKENDS:
         raise ValueError(f"backend {name!r} already registered")
-    BACKENDS[name] = Backend(name, doc)
+    BACKENDS[name] = Backend(name, doc, differentiable)
     return BACKENDS[name]
 
 
@@ -86,8 +97,11 @@ register_backend("slice", "XLA strided block slices (training default; "
                           "TP-friendly, zero-communication per shard)")
 register_backend("gather", "XLA jnp.take gathers over kept unit indices "
                            "(fuses into the matmul under jit)")
-register_backend("pallas", "compact-DMA Pallas kernels (kernels/*_matmul; "
-                           "interpret-mode on CPU, Mosaic on TPU)")
+register_backend("pallas", "compact-DMA Pallas kernels, fwd + custom-VJP "
+                           "bwd (kernels/*_matmul, kernels/*_matmul_bwd via "
+                           "kernels/autodiff; interpret-mode on CPU, Mosaic "
+                           "on TPU; trains end-to-end at ~1/dp FLOPs in "
+                           "both passes)")
 
 
 # ==========================================================================
@@ -109,6 +123,7 @@ def register_bias_policy(name: str):
 
 
 def validate_bias_policy(name: str) -> str:
+    """Return ``name`` if registered, else raise a clear ValueError."""
     if name not in BIAS_POLICIES:
         raise ValueError(
             f"unknown bias policy {name!r}; registered policies: "
@@ -172,6 +187,7 @@ class PatternFamily:
                 f"dp={dp} — kept shapes would be bias-dependent")
 
     def check_backend(self, backend: str) -> None:
+        """Reject backends this family cannot execute on (at construction)."""
         validate_backend(backend)
         if backend not in self.backends:
             raise ValueError(
@@ -206,6 +222,7 @@ def register_family(cls):
 
 
 def get_family(name: str) -> PatternFamily:
+    """Look up a registered PatternFamily instance by name."""
     if name not in FAMILIES:
         raise ValueError(
             f"unknown pattern family {name!r}; registered families: "
@@ -214,6 +231,7 @@ def get_family(name: str) -> PatternFamily:
 
 
 def validate_family(name: str) -> str:
+    """Return ``name`` if registered, else raise a clear ValueError."""
     get_family(name)
     return name
 
@@ -261,12 +279,14 @@ class IdentityFamily(PatternFamily):
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
+        """Dense (gated) FFN — no pattern applied."""
         h = x @ w_up
         h = constrain(h, ("batch", "seq", "ffn"))
         h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
         return h @ w_down
 
     def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        """Dense FFN is its own oracle."""
         return self.apply_ffn(x, w_up, w_down, w_gate, dp=1, bias=0, nb=nb,
                               backend="slice", act=act)
 
@@ -284,6 +304,7 @@ class RdpFamily(PatternFamily):
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
+        """Compact FFN over kept hidden neurons (slice/gather/pallas)."""
         if backend == "pallas":
             # compact Pallas kernels: kept column/row blocks are the only
             # ones DMA'd (kernels/rdp_matmul); same kept set and ×dp
@@ -304,6 +325,7 @@ class RdpFamily(PatternFamily):
         return h @ w_down
 
     def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        """Mask-multiply RDP reference (what dense frameworks execute)."""
         from .dropout import rdp_ffn_oracle
         return rdp_ffn_oracle(x, w_up, w_down, dp, bias, act=act,
                               w_gate=w_gate, block=w_up.shape[-1] // nb)
@@ -319,6 +341,7 @@ class TdpFamily(PatternFamily):
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
+        """FFN with diagonal-tile-dropped up projection (slice/pallas)."""
         tile = max(w_up.shape[0] // nb, 1)
         if backend == "pallas":
             from repro.kernels import ops as KO
@@ -333,6 +356,7 @@ class TdpFamily(PatternFamily):
         return h @ w_down
 
     def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
+        """Mask-multiply TDP reference (dense matmul against masked W)."""
         tile = max(w_up.shape[0] // nb, 1)
         h = (x @ (w_up * P.tdp_mask(w_up.shape[0], w_up.shape[1], dp, bias,
                                     tile, w_up.dtype))) * dp
@@ -409,10 +433,12 @@ class BoundPlan:
     # ---- compat aliases --------------------------------------------------
     @property
     def kind(self) -> str:
+        """Legacy alias for ``family`` (the PatternArgs field name)."""
         return self.family
 
     @property
     def active(self) -> bool:
+        """Whether the pattern drops anything (dp > 1)."""
         return self.dp > 1
 
     @property
@@ -521,6 +547,7 @@ class DropoutPlan:
     # ---- distribution views ----------------------------------------------
     @property
     def n_patterns(self) -> int:
+        """Size N of the categorical K (periods dp = 1..N)."""
         return len(self.dist)
 
     def support(self) -> list[int]:
@@ -571,12 +598,15 @@ class DropoutPlan:
         return self.bind(dp, b)
 
     def reseed(self, seed: int) -> "DropoutPlan":
+        """The same plan with a different sampling seed."""
         return dataclasses.replace(self, seed=seed)
 
     def with_backend(self, backend: str) -> "DropoutPlan":
+        """The same plan executing on a different backend (re-validated)."""
         return dataclasses.replace(self, backend=backend)
 
     def with_nb(self, nb: int) -> "DropoutPlan":
+        """The same plan with the pattern-block count pinned to ``nb``."""
         return dataclasses.replace(self, nb=nb)
 
 

@@ -50,6 +50,7 @@ class PatternSchedule:
 
     @property
     def n_patterns(self) -> int:
+        """Size N of the categorical K (periods dp = 1..N)."""
         return int(self.dist.size)
 
     def sample(self, step: int) -> tuple[Pattern, int]:

@@ -26,6 +26,8 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
+    """Inputs to Algorithm 1: target rate, support size and loss weights."""
+
     target_rate: float          # p, the conventional dropout rate to match
     n_patterns: int = 8         # N = dp_max
     lam1: float = 0.95          # fit weight
@@ -117,6 +119,7 @@ def expected_rate(k: np.ndarray) -> float:
 
 
 def entropy(k: np.ndarray) -> float:
+    """Shannon entropy of K (the diversity term of Alg. 1's loss)."""
     k = np.clip(np.asarray(k, np.float64), 1e-30, 1.0)
     return float(-np.sum(k * np.log(k)))
 

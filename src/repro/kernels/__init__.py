@@ -1,11 +1,24 @@
 """Pallas TPU kernels for compact RDP/TDP matmuls (interpret-mode on CPU).
 
 These are the compute hot-spots the paper optimizes: the dropout-patterned
-matmuls (paper Fig. 3).  rdp_matmul.py / tdp_matmul.py hold the pallas_call
-kernels, ops.py the jit'd wrappers, ref.py the pure-jnp oracles.
+matmuls in both passes (paper Fig. 3).  rdp_matmul.py / tdp_matmul.py hold
+the forward pallas_call kernels, rdp_matmul_bwd.py / tdp_matmul_bwd.py the
+dropout-aware dgrad/wgrad kernels, autodiff.py the ``jax.custom_vjp`` ops
+pairing them, ops.py the differentiable jit'd wrappers, ref.py the pure-jnp
+oracles.
 """
-from . import ops, ref
+from . import autodiff, ops, ref
+from .autodiff import rdp_matmul_cols_vjp, rdp_matmul_rows_vjp, tdp_matmul_vjp
 from .rdp_matmul import rdp_matmul_cols, rdp_matmul_rows
+from .rdp_matmul_bwd import (rdp_cols_dgrad, rdp_cols_wgrad, rdp_rows_dgrad,
+                             rdp_rows_wgrad)
 from .tdp_matmul import tdp_matmul
+from .tdp_matmul_bwd import tdp_dgrad, tdp_wgrad
 
-__all__ = ["ops", "ref", "rdp_matmul_cols", "rdp_matmul_rows", "tdp_matmul"]
+__all__ = [
+    "autodiff", "ops", "ref",
+    "rdp_matmul_cols", "rdp_matmul_rows", "tdp_matmul",
+    "rdp_cols_dgrad", "rdp_cols_wgrad", "rdp_rows_dgrad", "rdp_rows_wgrad",
+    "tdp_dgrad", "tdp_wgrad",
+    "rdp_matmul_cols_vjp", "rdp_matmul_rows_vjp", "tdp_matmul_vjp",
+]

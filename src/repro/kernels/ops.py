@@ -5,6 +5,12 @@ compile to Mosaic.  ``use_pallas=False`` falls back to the XLA gather path
 (repro.core.dropout) — same numerics contract, used by pjit'd training where
 the gather fuses into the matmul anyway.  Auto-detection: Pallas path on TPU
 backends, XLA path elsewhere, overridable per call.
+
+Every wrapper is **differentiable**: the Pallas path routes through the
+``jax.custom_vjp`` ops in ``kernels/autodiff.py``, which pair each forward
+kernel with dropout-aware dgrad/wgrad kernels (1/dp FLOPs in the backward
+pass too, dropped-block weight grads exactly zero — DESIGN.md §9).  This is
+what lets ``DropoutPlan(backend="pallas")`` train end-to-end.
 """
 from __future__ import annotations
 
@@ -13,8 +19,7 @@ import functools
 import jax
 
 from . import ref
-from .rdp_matmul import rdp_matmul_cols, rdp_matmul_rows
-from .tdp_matmul import tdp_matmul
+from .autodiff import rdp_matmul_cols_vjp, rdp_matmul_rows_vjp, tdp_matmul_vjp
 
 
 @functools.cache
@@ -28,7 +33,11 @@ def _interpret() -> bool:
 
 def rdp_up(a, w, bias, *, dp: int, block: int = 128, scale: bool = True,
            use_pallas: bool | None = None):
-    """Compact up-projection: [., K] @ [K, N] -> [., N/dp] (×dp if scale)."""
+    """Compact up-projection: [., K] @ [K, N] -> [., N/dp] (×dp if scale).
+
+    Differentiable on both paths: Pallas via the custom-VJP op (compact
+    dgrad/wgrad kernels), XLA via autodiff through the gather reference.
+    """
     if dp == 1:
         return a @ w
     if use_pallas is None:
@@ -36,8 +45,8 @@ def rdp_up(a, w, bias, *, dp: int, block: int = 128, scale: bool = True,
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
     if use_pallas:
-        out = rdp_matmul_cols(a2, w, bias, dp=dp, block=block, scale=scale,
-                              interpret=_interpret())
+        out = rdp_matmul_cols_vjp(a2, w, bias, dp, block, scale,
+                                  _interpret())
     else:
         out = ref.rdp_matmul_cols_ref(a2, w, dp, bias, block=block,
                                       scale=scale)
@@ -46,7 +55,10 @@ def rdp_up(a, w, bias, *, dp: int, block: int = 128, scale: bool = True,
 
 def rdp_down(a_compact, w, bias, *, dp: int, block: int = 128,
              use_pallas: bool | None = None):
-    """Compact down-projection: [., K/dp] @ [K, N] -> [., N]."""
+    """Compact down-projection: [., K/dp] @ [K, N] -> [., N].
+
+    Differentiable on both paths (see ``rdp_up``).
+    """
     if dp == 1:
         return a_compact @ w
     if use_pallas is None:
@@ -54,8 +66,8 @@ def rdp_down(a_compact, w, bias, *, dp: int, block: int = 128,
     lead = a_compact.shape[:-1]
     a2 = a_compact.reshape(-1, a_compact.shape[-1])
     if use_pallas:
-        out = rdp_matmul_rows(a2, w, bias, dp=dp, block=block,
-                              interpret=_interpret())
+        out = rdp_matmul_rows_vjp(a2, w, bias, dp, block, False,
+                                  _interpret())
     else:
         out = ref.rdp_matmul_rows_ref(a2, w, dp, bias, block=block)
     return out.reshape(*lead, -1)
@@ -63,7 +75,10 @@ def rdp_down(a_compact, w, bias, *, dp: int, block: int = 128,
 
 def tdp_mm(a, w, bias, *, dp: int, tile: int = 128,
            use_pallas: bool | None = None):
-    """TDP masked matmul: [., K] @ [K, N] -> [., N], ×dp scale."""
+    """TDP masked matmul: [., K] @ [K, N] -> [., N], ×dp scale.
+
+    Differentiable on both paths (see ``rdp_up``).
+    """
     if dp == 1:
         return a @ w
     if use_pallas is None:
@@ -71,7 +86,7 @@ def tdp_mm(a, w, bias, *, dp: int, tile: int = 128,
     lead = a.shape[:-1]
     a2 = a.reshape(-1, a.shape[-1])
     if use_pallas:
-        out = tdp_matmul(a2, w, bias, dp=dp, tile=tile, interpret=_interpret())
+        out = tdp_matmul_vjp(a2, w, bias, dp, tile, True, _interpret())
     else:
         out = ref.tdp_matmul_ref(a2, w, dp, bias, tile=tile)
     return out.reshape(*lead, -1)

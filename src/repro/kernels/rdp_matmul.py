@@ -48,22 +48,39 @@ def _fit_block(dim: int, pref: int, quantum: int = 8) -> int:
     return dim
 
 
-def _mm_kernel(scale: float, contraction_axis: int):
-    """Shared accumulate-over-k kernel body."""
+def _acc_kernel(scale: float, contraction_axis: int,
+                dims=((1,), (0,)), prefetch: bool = True):
+    """Shared accumulate-over-k kernel body (fwd and bwd kernels).
 
-    def kernel(b_ref, a_ref, w_ref, o_ref, acc_ref):
+    Contracts ``dims`` of (lhs, rhs) per ``lax.dot_general`` convention —
+    ``((1,), (0,))`` is a plain matmul, ``((1,), (1,))`` is ``lhs @ rhsᵀ``,
+    ``((0,), (0,))`` is ``lhsᵀ @ rhs``.  Zero-inits the f32 VMEM scratch at
+    the first contraction step and writes the scaled epilogue at the last.
+    ``prefetch`` prepends the scalar-prefetch bias ref that
+    PrefetchScalarGridSpec kernels receive (bias-free kernels run a plain
+    grid).
+    """
+
+    def body(l_ref, r_ref, o_ref, acc_ref):
         k = pl.program_id(contraction_axis)
 
         @pl.when(k == 0)
         def _init():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        acc_ref[...] += jnp.dot(a_ref[...], w_ref[...],
-                                preferred_element_type=jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(
+            l_ref[...], r_ref[...], (dims, ((), ())),
+            preferred_element_type=jnp.float32)
 
         @pl.when(k == pl.num_programs(contraction_axis) - 1)
         def _fin():
             o_ref[...] = (acc_ref[...] * scale).astype(o_ref.dtype)
+
+    if not prefetch:
+        return body
+
+    def kernel(b_ref, l_ref, r_ref, o_ref, acc_ref):
+        body(l_ref, r_ref, o_ref, acc_ref)
 
     return kernel
 
@@ -89,8 +106,8 @@ def rdp_matmul_cols(a: jax.Array, w: jax.Array, b: jax.Array, *, dp: int,
     assert m % bm == 0 and kdim % bk == 0, (m, bm, kdim, bk)
 
     grid = (m // bm, nc // block, kdim // bk)
-    kern = _mm_kernel(float(dp) if (scale and dp > 1) else 1.0,
-                      contraction_axis=2)
+    kern = _acc_kernel(float(dp) if (scale and dp > 1) else 1.0,
+                       contraction_axis=2)
 
     return pl.pallas_call(
         kern,
@@ -132,8 +149,8 @@ def rdp_matmul_rows(a_compact: jax.Array, w: jax.Array, b: jax.Array, *,
     assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
 
     grid = (m // bm, n // bn, kc // block)
-    kern = _mm_kernel(float(dp) if (scale and dp > 1) else 1.0,
-                      contraction_axis=2)
+    kern = _acc_kernel(float(dp) if (scale and dp > 1) else 1.0,
+                       contraction_axis=2)
 
     return pl.pallas_call(
         kern,

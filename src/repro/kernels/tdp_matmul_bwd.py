@@ -1,0 +1,158 @@
+"""Backward Pallas kernels for the diagonal-TDP matmul (dgrad + wgrad).
+
+The TDP mask keeps weight tile ``(i, j)`` iff ``(i + j - b) % dp == 0``
+(diagonal period, DESIGN.md §2).  Transposition preserves that diagonal
+structure, so both adjoints stay compact:
+
+* ``tdp_dgrad`` — ``dA[:, iᵗʰ tile] = Σ_s dC[:, j(i,s)] @ W[i, j(i,s)]ᵀ``
+  with ``j(i, s) = (b - i) mod dp + s·dp``: for every input tile-column,
+  exactly ``tc/dp`` output tiles contribute.  Requires ``dp | (N/tile)``
+  (the forward only needs ``dp | (K/tile)``) — the caller falls back to the
+  mask-multiply adjoint when the output tile grid doesn't divide.
+* ``tdp_wgrad`` — the *compact* weight grad ``[tr/dp · tile, N]``: slot
+  ``s`` of output tile-column ``j`` holds the grad of kept tile
+  ``i = (b - j) mod dp + s·dp`` (the same ``row_tile`` relation the forward
+  uses, so ``dp | (K/tile)`` is already guaranteed).  The caller expands it
+  into the full ``dW`` with dropped tiles identically zero
+  (``kernels/autodiff.py``).
+
+Both share the forward kernel's contracts: scalar-prefetched bias (one
+compiled kernel per ``dp``), f32 VMEM accumulation, tile edge pinned to the
+MXU dim.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .rdp_matmul import _fit_block
+from .tdp_matmul import TILE
+
+
+@functools.partial(jax.jit, static_argnames=("dp", "tile", "bm", "scale",
+                                              "interpret"))
+def tdp_dgrad(dc: jax.Array, w: jax.Array, b: jax.Array, *, dp: int,
+              tile: int = TILE, bm: int = 128, scale: bool = True,
+              interpret: bool = False) -> jax.Array:
+    """dA[M, K] = dC[M, N] @ (W ∘ diag-TDP-mask)ᵀ (· dp if the forward scaled).
+
+    dc: [M, N]; w: [K, N]; b: int32 scalar bias.  Requires dp | (N/tile) so
+    every input tile-column has a bias-independent count of contributing
+    output tiles (the transposed-diagonal twin of the forward's
+    dp | (K/tile) requirement).
+    """
+    m, n = dc.shape
+    kdim, n2 = w.shape
+    assert n == n2, (dc.shape, w.shape)
+    tr, tc = kdim // tile, n // tile
+    assert kdim % tile == 0 and n % tile == 0, (kdim, n, tile)
+    assert tc % dp == 0, (tc, dp)
+    bm = _fit_block(m, bm)
+    assert m % bm == 0, (m, bm)
+    kept = tc // dp
+    out_scale = float(dp) if (scale and dp > 1) else 1.0
+
+    def kernel(b_ref, dc_ref, w_ref, o_ref, acc_ref):
+        s = pl.program_id(2)
+
+        @pl.when(s == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jax.lax.dot_general(
+            dc_ref[...], w_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(s == pl.num_programs(2) - 1)
+        def _fin():
+            o_ref[...] = (acc_ref[...] * out_scale).astype(o_ref.dtype)
+
+    def col_tile(i, s, bias):
+        # kept output tile-column for input tile-row i, slot s
+        return (bias[0] - i) % dp + s * dp
+
+    grid = (m // bm, tr, kept)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, tile),
+                             lambda mi, i, s, bias: (mi, col_tile(i, s, bias))),
+                pl.BlockSpec((tile, tile),
+                             lambda mi, i, s, bias: (i, col_tile(i, s, bias))),
+            ],
+            out_specs=pl.BlockSpec((bm, tile), lambda mi, i, s, bias: (mi, i)),
+            scratch_shapes=[pltpu.VMEM((bm, tile), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, kdim), dc.dtype),
+        interpret=interpret,
+    )(jnp.asarray(b, jnp.int32).reshape(1), dc, w)
+
+
+@functools.partial(jax.jit, static_argnames=("dp", "tile", "bm", "scale",
+                                              "interpret"))
+def tdp_wgrad(a: jax.Array, dc: jax.Array, b: jax.Array, *, dp: int,
+              tile: int = TILE, bm: int = 512, scale: bool = True,
+              interpret: bool = False) -> jax.Array:
+    """Compact dW[(K/tile/dp)·tile, N]: grads of the kept tiles only.
+
+    Slot ``s`` of tile-column ``j`` holds ``A[:, i·tile:(i+1)·tile]ᵀ @
+    dC[:, j·tile:(j+1)·tile]`` for the kept row-tile ``i = (b - j) mod dp +
+    s·dp`` — the identical kept-tile enumeration as the forward kernel, so
+    it shares the forward's dp | (K/tile) requirement and nothing else.
+    Expansion into the full (mostly-zero) dW happens in autodiff.py.
+    """
+    m, kdim = a.shape
+    m2, n = dc.shape
+    assert m == m2, (a.shape, dc.shape)
+    tr, tc = kdim // tile, n // tile
+    assert kdim % tile == 0 and n % tile == 0, (kdim, n, tile)
+    assert tr % dp == 0, (tr, dp)
+    bm = _fit_block(m, bm)
+    assert m % bm == 0, (m, bm)
+    kept = tr // dp
+    out_scale = float(dp) if (scale and dp > 1) else 1.0
+
+    def kernel(b_ref, a_ref, dc_ref, o_ref, acc_ref):
+        mi = pl.program_id(2)
+
+        @pl.when(mi == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        acc_ref[...] += jax.lax.dot_general(
+            a_ref[...], dc_ref[...], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(mi == pl.num_programs(2) - 1)
+        def _fin():
+            o_ref[...] = (acc_ref[...] * out_scale).astype(o_ref.dtype)
+
+    def row_tile(j, s, bias):
+        # kept contraction tile for output column j, slot s (as forward)
+        return (bias[0] - j) % dp + s * dp
+
+    grid = (kept, tc, m // bm)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, tile),
+                             lambda s, j, mi, bias: (mi, row_tile(j, s, bias))),
+                pl.BlockSpec((bm, tile), lambda s, j, mi, bias: (mi, j)),
+            ],
+            out_specs=pl.BlockSpec((tile, tile),
+                                   lambda s, j, mi, bias: (s, j)),
+            scratch_shapes=[pltpu.VMEM((tile, tile), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((kept * tile, n), dc.dtype),
+        interpret=interpret,
+    )(jnp.asarray(b, jnp.int32).reshape(1), a, dc)

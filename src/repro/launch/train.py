@@ -7,7 +7,8 @@
 the full config is used (real deployment path; on this CPU container that
 is only practical via the dry-run).  The launcher wires together: config →
 pattern-distribution search (Alg. 1) → data pipeline → Trainer (pattern
-bucketing, checkpoints, watchdog).
+bucketing, checkpoints, watchdog).  ``--backend pallas`` trains through
+the compact-DMA Pallas kernels (custom-VJP backward, DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ from pathlib import Path
 import jax
 
 from repro.configs import get_spec, normalize
-from repro.core.sampler import build_schedule, identity_schedule
+from repro.core.plan import build_plan, identity_plan
 from repro.data.pipeline import SyntheticLMData
 from repro.models import init_lm, materialize
 from repro.optim.optimizers import AdamW
@@ -36,6 +37,10 @@ def main(argv=None):
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="target rate p for Approximate Random Dropout")
     ap.add_argument("--pattern", choices=["rdp", "tdp"], default="rdp")
+    ap.add_argument("--backend", choices=["slice", "gather", "pallas"],
+                    default="slice",
+                    help="pattern execution backend (pallas = compact "
+                         "kernels, fwd + custom-VJP bwd)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--compress-grads", action="store_true")
@@ -48,12 +53,13 @@ def main(argv=None):
     params = materialize(jax.random.PRNGKey(args.seed), init_lm(cfg)[0])
 
     if args.dropout > 0:
-        # dp must divide the per-shard pattern-block count; nb blocks total
-        sched = build_schedule(args.pattern, args.dropout,
-                               n_units_blocks=8, dp_max=8,
-                               block=cfg.pattern_nb, seed=args.seed)
+        # dp must divide the pattern-block count (the Trainer re-pins nb to
+        # the model's cfg.pattern_nb)
+        plan = build_plan(args.pattern, args.dropout, nb=cfg.pattern_nb,
+                          dp_max=8, block=cfg.d_ff // cfg.pattern_nb,
+                          backend=args.backend, seed=args.seed)
     else:
-        sched = identity_schedule(args.pattern)
+        plan = identity_plan()
 
     data = SyntheticLMData(
         vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
@@ -64,7 +70,7 @@ def main(argv=None):
                          microbatches=args.microbatches,
                          ckpt_dir=args.ckpt_dir,
                          compress_grads=args.compress_grads)
-    trainer = Trainer(cfg, AdamW(), params, schedule=sched, tcfg=tcfg)
+    trainer = Trainer(cfg, AdamW(), params, plan=plan, tcfg=tcfg)
     history = trainer.run(data.batch)
     print(f"final loss: {history[-1]['loss']:.4f} "
           f"(from {history[0]['loss']:.4f}); "

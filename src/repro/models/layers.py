@@ -10,7 +10,9 @@ static) and compute only the kept 1/dp of the hidden dimension, dispatching
 the pattern math through the family/backend registries in ``core.plan``
 (DESIGN.md §8).  The default "slice" backend uses *strided block slices* —
 TP-friendly (each model shard slices locally, no gather) and shape-static
-per (dp, bias) executable bucket (DESIGN.md §2).
+per (dp, bias) executable bucket (DESIGN.md §2).  Every backend — pallas
+included, via the custom-VJP kernels in kernels/autodiff.py — is
+differentiable, so the same blocks serve training and serving unchanged.
 """
 from __future__ import annotations
 

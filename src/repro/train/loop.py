@@ -88,6 +88,14 @@ class Trainer:
             self.plan = schedule.to_plan(nb=cfg.pattern_nb, backend="slice")
         else:
             self.plan = identity_plan(nb=cfg.pattern_nb)
+        # training needs grads through the pattern matmuls — reject an
+        # inference-only backend here rather than deep inside jax.grad
+        # ("slice"/"gather" differentiate via XLA autodiff, "pallas" via
+        # the custom-VJP compact kernels in kernels/autodiff.py)
+        if not plan_mod.BACKENDS[self.plan.backend].differentiable:
+            raise ValueError(
+                f"pattern backend {self.plan.backend!r} is not "
+                f"differentiable and cannot be used for training")
         self.tcfg = tcfg
         self.lr_fn = cosine_schedule(tcfg.base_lr, tcfg.warmup, tcfg.steps)
         self._buckets: dict[tuple, Callable] = {}

@@ -6,6 +6,14 @@ suitable for jit with shardings.  The dropout pattern (dp, bias) is baked in
 statically — the trainer keeps one compiled executable per pattern bucket
 (DESIGN.md §2) and dispatches per step.
 
+The pattern applies to BOTH passes: ``jax.value_and_grad`` differentiates
+through the pattern FFNs, and every backend keeps the backward matmuls
+compact — "slice"/"gather" because XLA transposes the strided slice/gather,
+"pallas" through the dropout-aware dgrad/wgrad kernels registered via
+``jax.custom_vjp`` (kernels/autodiff.py, DESIGN.md §9).  That is the
+paper's Fig. 3 step 4: dgrad/wgrad skip dropped blocks too, so a step runs
+at ~1/dp of the dense FFN FLOPs end-to-end.
+
 Gradient accumulation: the global batch is split into ``microbatches``
 chunks scanned sequentially; grads are averaged in fp32.  Optional TernGrad
 compression (parallel/compression.py) is applied to the accumulated grads

@@ -1,0 +1,43 @@
+"""Docs-sync check: execute the README quickstart so it can never drift.
+
+Extracts every fenced ``python`` code block from the root README.md and
+executes them in order in one shared namespace (the quickstart is the
+first; later python blocks, if any, may build on it).  CI runs this on CPU
+alongside the examples smoke — an API change that breaks the documented
+quickstart fails the build instead of silently rotting the docs.
+
+Run:  PYTHONPATH=src python tools/run_readme_quickstart.py [README.md]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+
+def extract_python_blocks(text: str) -> list[str]:
+    """Fenced ```python blocks, in document order."""
+    return [m.group(1) for m in FENCE.finditer(text)]
+
+
+def main(argv: list[str]) -> int:
+    readme = Path(argv[1]) if len(argv) > 1 else \
+        Path(__file__).resolve().parent.parent / "README.md"
+    blocks = extract_python_blocks(readme.read_text())
+    if not blocks:
+        print(f"ERROR: no ```python blocks found in {readme}", flush=True)
+        return 1
+    ns: dict = {"__name__": "__readme__"}
+    for i, block in enumerate(blocks):
+        print(f"--- executing {readme.name} python block {i + 1}/"
+              f"{len(blocks)} ({len(block.splitlines())} lines) ---",
+              flush=True)
+        exec(compile(block, f"{readme.name}:block{i + 1}", "exec"), ns)
+    print(f"--- {len(blocks)} block(s) OK ---", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
