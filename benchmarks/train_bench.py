@@ -17,6 +17,15 @@ drives real ``make_train_step`` executables (fwd + bwd + optimizer) per
 Run:  PYTHONPATH=src python benchmarks/train_bench.py
       [--arch qwen2-1-5b] [--backend slice|gather|pallas] [--dps 1,2,4,8]
       [--steps 8] [--batch 4] [--seq 64] [--out BENCH_train.json]
+      [--profile tp [--mesh-shape 2x4]]
+
+Sharded mode: ``--profile`` runs every step through the mesh-aware path —
+params/ZeRO-1 opt state jitted with explicit shardings from the
+``parallel.sharding.PROFILES`` entry on ``--mesh-shape`` (default: the
+host mesh; force devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Each per-dp plan
+is ``validate_mesh``-checked first, and rows record the profile — the
+per-profile records the acceptance criteria ask for in BENCH_train.json.
 
 Note on backends: "slice" is the XLA training default and what you want
 for wall-time numbers on CPU; "pallas" exercises the custom-VJP compact
@@ -26,18 +35,24 @@ point, but interpret-mode wall time is not meaningful.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as PSpec
 
 from repro.configs import get_smoke, normalize
 from repro.core.plan import DropoutPlan, get_family
 from repro.data.pipeline import SyntheticLMData
+from repro.launch.mesh import make_host_mesh, mesh_from_spec
 from repro.models import init_lm, materialize
-from repro.models.transformer import ModelConfig
+from repro.models.transformer import ModelConfig, batch_logical_axes
 from repro.optim.optimizers import AdamW
+from repro.parallel.sharding import (PROFILES, logical_sharding,
+                                     set_mesh_and_rules)
+from repro.train.distributed import state_shardings
 from repro.train.train_step import make_train_step
 
 try:
@@ -88,13 +103,25 @@ def _measured_step_flops(compiled) -> float | None:
 def run_bench(args) -> dict:
     cfg = get_smoke(normalize(args.arch))
     family = get_family(args.family)
-    params0 = materialize(jax.random.PRNGKey(args.seed), init_lm(cfg)[0])
+    abstract_params, params_axes = init_lm(cfg)
+    params0 = materialize(jax.random.PRNGKey(args.seed), abstract_params)
     data = SyntheticLMData(vocab=cfg.vocab, seq_len=args.seq,
                            global_batch=args.batch, seed=args.seed)
     optimizer = AdamW()
     dps = [int(d) for d in args.dps.split(",")]
     for dp in dps:
         family.validate(cfg.pattern_nb, dp)
+
+    # sharded mode: explicit state/batch shardings from the profile's rules
+    mesh = rules = st_sh = None
+    if args.profile:
+        mesh = (mesh_from_spec(args.mesh_shape) if args.mesh_shape
+                else make_host_mesh())
+        rules = PROFILES[args.profile]
+        st_sh = state_shardings(
+            params0, params_axes, jax.eval_shape(optimizer.init, params0),
+            mesh, rules)
+        params0 = jax.device_put(params0, st_sh.params)
 
     rows = []
     dense_t = None
@@ -106,28 +133,49 @@ def run_bench(args) -> dict:
                            block=cfg.d_ff // cfg.pattern_nb,
                            backend=args.backend, seed=args.seed)
         bound = plan.bind(dp, 0) if dp > 1 else plan.identity()
-        step = jax.jit(make_train_step(cfg, optimizer, pat=bound))
+        base_step = make_train_step(cfg, optimizer, pat=bound)
+        if rules is not None:
+            plan.validate_mesh(mesh, rules, dims={"ffn_kept": cfg.d_ff})
+            sample = jax.tree.map(jnp.asarray, data.batch(0))
+            b_sh = jax.tree.map(
+                lambda x, ax: logical_sharding(x.shape, ax, mesh, rules,
+                                               is_param=False),
+                sample, batch_logical_axes(cfg, sample))
+            repl = NamedSharding(mesh, PSpec())
+            step = jax.jit(base_step,
+                           in_shardings=(st_sh.params, st_sh.opt, b_sh,
+                                         repl),
+                           out_shardings=(st_sh.params, st_sh.opt, repl))
+            ctx = set_mesh_and_rules(mesh, rules)
+        else:
+            step = jax.jit(base_step)
+            ctx = contextlib.nullcontext()
 
         params = jax.tree.map(jnp.copy, params0)
-        opt_state = optimizer.init(params)
+        opt_state = (jax.jit(optimizer.init, out_shardings=st_sh.opt)(params)
+                     if rules is not None else optimizer.init(params))
         lr = jnp.float32(1e-3)
         times = []
-        for i in range(args.warmup + args.steps):
-            batch = jax.tree.map(jnp.asarray, data.batch(i))
-            t0 = time.perf_counter()
-            params, opt_state, metrics = step(params, opt_state, batch, lr)
-            jax.block_until_ready(metrics["loss"])
-            if i >= args.warmup:
-                times.append(time.perf_counter() - t0)
-        t_med = float(np.median(times))
-        if dp == 1:
-            dense_t = t_med
+        with ctx:
+            for i in range(args.warmup + args.steps):
+                batch = jax.tree.map(jnp.asarray, data.batch(i))
+                t0 = time.perf_counter()
+                params, opt_state, metrics = step(params, opt_state, batch,
+                                                  lr)
+                jax.block_until_ready(metrics["loss"])
+                if i >= args.warmup:
+                    times.append(time.perf_counter() - t0)
+            t_med = float(np.median(times))
+            if dp == 1:
+                dense_t = t_med
 
-        fl = ffn_pattern_flops(cfg, args.batch, args.seq, dp)
-        # reuse the already-jitted step: .lower().compile() hits its cache
-        lowered = step.lower(params, opt_state, batch, lr)
+            fl = ffn_pattern_flops(cfg, args.batch, args.seq, dp)
+            # reuse the already-jitted step: .lower().compile() hits its cache
+            lowered = step.lower(params, opt_state, batch, lr)
+            compiled = lowered.compile()
         rows.append({
             "dp": dp,
+            "profile": args.profile,
             "step_time_ms": round(t_med * 1e3, 2),
             "speedup_vs_dense": (round(dense_t / t_med, 3)
                                  if dense_t else None),
@@ -137,12 +185,13 @@ def run_bench(args) -> dict:
             "ffn_fwd_bwd_flop_fraction":
                 (fl["compact_fwd"] + fl["compact_bwd"])
                 / (fl["dense_fwd"] + fl["dense_bwd"]),
-            "step_flops_measured": _measured_step_flops(lowered.compile()),
+            "step_flops_measured": _measured_step_flops(compiled),
         })
         r = rows[-1]
         print(f"dp={dp}: step {r['step_time_ms']:.1f}ms "
               f"(x{r['speedup_vs_dense']} vs dense)  "
-              f"ffn fwd+bwd FLOP fraction {r['ffn_fwd_bwd_flop_fraction']:.3f}",
+              f"ffn fwd+bwd FLOP fraction {r['ffn_fwd_bwd_flop_fraction']:.3f}"
+              + (f"  [profile={args.profile}]" if args.profile else ""),
               flush=True)
 
     return bench_record(
@@ -151,7 +200,9 @@ def run_bench(args) -> dict:
                 "dps": dps, "steps": args.steps, "warmup": args.warmup,
                 "batch": args.batch, "seq": args.seq, "seed": args.seed,
                 "pattern_nb": cfg.pattern_nb, "n_layers": cfg.n_layers,
-                "d_model": cfg.d_model, "d_ff": cfg.d_ff},
+                "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+                "profile": args.profile,
+                "mesh_shape": dict(mesh.shape) if mesh is not None else None},
         rows=rows)
 
 
@@ -168,7 +219,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--quick", action="store_true",
+    ap.add_argument("--profile", choices=sorted(PROFILES), default=None,
+                    help="run sharded: jit with explicit shardings from "
+                         "this parallel.sharding.PROFILES entry")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="mesh as DxM or PxDxM (with --profile); default: "
+                         "host mesh over all visible devices")
+    ap.add_argument("--quick", "--smoke", dest="quick", action="store_true",
                     help="smaller sweep for CI smoke")
     ap.add_argument("--out", default="BENCH_train.json")
     args = ap.parse_args(argv)

@@ -50,6 +50,15 @@ from . import patterns as P
 from .search import SearchConfig, search_distribution
 
 
+class MeshDivisibilityError(ValueError):
+    """A plan bucket's kept (compacted) dim does not divide its mesh axes.
+
+    Raised by ``DropoutPlan.validate_mesh`` at trainer construction so a
+    pattern that would silently lose its tensor-parallel sharding (the
+    replication fallback in ``parallel.sharding._pspec_for``) fails loudly
+    with an actionable message instead."""
+
+
 # ==========================================================================
 # Backend registry
 # ==========================================================================
@@ -319,7 +328,11 @@ class RdpFamily(PatternFamily):
         if w_gate is not None:
             w_gate = take(w_gate, 1, nb, dp, bias)
         h = x @ w_up
-        h = constrain(h, ("batch", "seq", "ffn"))
+        # the kept hidden activation is d_ff/dp wide — its own logical axis
+        # ('ffn_kept', same mesh mapping as 'ffn') so mesh divisibility of
+        # the SHRUNK dim is validated per bucket (DropoutPlan.validate_mesh)
+        # instead of silently replicating when d_ff/dp stops dividing TP
+        h = constrain(h, ("batch", "seq", "ffn_kept" if dp > 1 else "ffn"))
         h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
         h = h * dp  # inverted-dropout scale
         return h @ w_down
@@ -596,6 +609,39 @@ class DropoutPlan:
         dp = int(rng.choice(self.n_patterns, p=self.dist)) + 1
         b = int(rng.integers(0, dp))  # uniform over {0..dp-1}
         return self.bind(dp, b)
+
+    # ---- mesh composition ------------------------------------------------
+    def validate_mesh(self, mesh, rules, dims: Mapping[str, int]) -> None:
+        """Check every ``buckets()`` entry composes with a sharding profile.
+
+        ``dims`` maps each pattern-compacted *logical axis* (e.g.
+        ``"ffn_kept"``) to the FULL size of the dim it compacts (e.g.
+        ``cfg.d_ff``).  For every (dp, bias) bucket the kept size is
+        ``full // dp``; if the profile shards that axis over mesh axes whose
+        product no longer divides it, ``_pspec_for`` would silently fall
+        back to replication — the compact matmul would run unsharded and
+        the 1/dp FLOP win would not survive partitioning.  This raises
+        ``MeshDivisibilityError`` at construction instead.
+        """
+        from repro.parallel.sharding import rule_shard_axes
+        for axis_name, full in dims.items():
+            mesh_axes, size = rule_shard_axes(axis_name, mesh, rules,
+                                              is_param=False)
+            if size <= 1:
+                continue
+            for dp, bias in self.buckets():
+                kept = full // dp
+                if kept % size != 0:
+                    raise MeshDivisibilityError(
+                        f"plan bucket (dp={dp}, bias={bias}): kept "
+                        f"'{axis_name}' dim {kept} (= {full}/{dp}) is not "
+                        f"divisible by mesh axes {mesh_axes} (total "
+                        f"{size}-way) — the compact matmul would silently "
+                        f"replicate instead of sharding.  Fix: restrict the "
+                        f"plan's dp support to values with "
+                        f"({full} // dp) % {size} == 0, shrink the "
+                        f"{mesh_axes} mesh axes, or pick a profile that "
+                        f"does not shard '{axis_name}'")
 
     def reseed(self, seed: int) -> "DropoutPlan":
         """The same plan with a different sampling seed."""

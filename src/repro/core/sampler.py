@@ -20,6 +20,7 @@ communication.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -41,6 +42,11 @@ class PatternSchedule:
     seed: int = 0
 
     def __post_init__(self):
+        warnings.warn(
+            "PatternSchedule is deprecated; hold a repro.core.plan."
+            "DropoutPlan and call plan.sample(step) instead (lift an "
+            "existing schedule with schedule.to_plan(nb=...))",
+            DeprecationWarning, stacklevel=3)
         d = np.asarray(self.dist, np.float64)
         if d.ndim != 1 or d.size < 1:
             raise ValueError("dist must be a 1-D categorical distribution")

@@ -24,3 +24,23 @@ def make_host_mesh():
     pjit code paths run on 1 CPU device in tests."""
     n = len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def mesh_from_spec(spec: str):
+    """Mesh from a CLI string: ``"DxM"`` → (data, model), ``"PxDxM"`` →
+    (pod, data, model).  E.g. ``--mesh-shape 2x4`` on 8 forced host devices.
+
+    The device-count product must match the available devices (jax.make_mesh
+    enforces it); axis names follow the repo convention so every
+    ``ShardingRules`` profile applies unchanged.
+    """
+    dims = tuple(int(d) for d in spec.lower().replace("×", "x").split("x"))
+    if len(dims) == 2:
+        axes = ("data", "model")
+    elif len(dims) == 3:
+        axes = ("pod", "data", "model")
+    else:
+        raise ValueError(
+            f"mesh spec {spec!r} must have 2 (data x model) or 3 "
+            f"(pod x data x model) dims, got {len(dims)}")
+    return jax.make_mesh(dims, axes)

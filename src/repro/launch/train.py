@@ -6,9 +6,16 @@
 ``--smoke`` runs the reduced config on host devices (CI path); without it
 the full config is used (real deployment path; on this CPU container that
 is only practical via the dry-run).  The launcher wires together: config →
-pattern-distribution search (Alg. 1) → data pipeline → Trainer (pattern
-bucketing, checkpoints, watchdog).  ``--backend pallas`` trains through
-the compact-DMA Pallas kernels (custom-VJP backward, DESIGN.md §9).
+pattern-distribution search (Alg. 1) → data pipeline → DistributedTrainer
+(pattern bucketing × sharding profile, checkpoints, watchdog).
+``--backend pallas`` trains through the compact-DMA Pallas kernels
+(custom-VJP backward, DESIGN.md §9).  ``--profile`` picks the
+``parallel.sharding.PROFILES`` entry and ``--mesh-shape DxM`` (or
+``PxDxM``) the mesh — e.g. with 8 forced host devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \\
+        --dropout 0.5 --profile tp --mesh-shape 2x4
 """
 from __future__ import annotations
 
@@ -21,9 +28,12 @@ import jax
 from repro.configs import get_spec, normalize
 from repro.core.plan import build_plan, identity_plan
 from repro.data.pipeline import SyntheticLMData
+from repro.launch.mesh import make_host_mesh, mesh_from_spec
 from repro.models import init_lm, materialize
 from repro.optim.optimizers import AdamW
-from repro.train.loop import Trainer, TrainerConfig
+from repro.parallel.sharding import PROFILES
+from repro.train.distributed import DistributedTrainer
+from repro.train.loop import TrainerConfig
 
 
 def main(argv=None):
@@ -41,6 +51,11 @@ def main(argv=None):
                     default="slice",
                     help="pattern execution backend (pallas = compact "
                          "kernels, fwd + custom-VJP bwd)")
+    ap.add_argument("--profile", choices=sorted(PROFILES), default="tp",
+                    help="sharding profile (parallel.sharding.PROFILES)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="mesh as DxM or PxDxM (e.g. 2x4); default: the "
+                         "host mesh over all visible devices")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--compress-grads", action="store_true")
@@ -70,7 +85,12 @@ def main(argv=None):
                          microbatches=args.microbatches,
                          ckpt_dir=args.ckpt_dir,
                          compress_grads=args.compress_grads)
-    trainer = Trainer(cfg, AdamW(), params, plan=plan, tcfg=tcfg)
+    mesh = (mesh_from_spec(args.mesh_shape) if args.mesh_shape
+            else make_host_mesh())
+    trainer = DistributedTrainer(cfg, AdamW(), params, mesh=mesh,
+                                 profile=args.profile, plan=plan, tcfg=tcfg)
+    print(f"mesh {dict(mesh.shape)} profile {args.profile} "
+          f"buckets {trainer.plan.buckets()}", flush=True)
     history = trainer.run(data.batch)
     print(f"final loss: {history[-1]['loss']:.4f} "
           f"(from {history[0]['loss']:.4f}); "

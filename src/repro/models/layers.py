@@ -299,18 +299,11 @@ def ffn_block(params, x, pat=NO_PATTERN, *, layer: int = 0,
     bp = plan_mod.as_bound(pat).for_layer(layer)
     w_up, w_down = params["w_up"], params["w_down"]
     w_gate = params.get("w_gate")
-    if bp.active:
-        fam = plan_mod.get_family(bp.family)
-        out = fam.apply_ffn(x, w_up, w_down, w_gate, dp=bp.dp, bias=bp.bias,
-                            nb=bp.nb, backend=bp.backend, act=act)
-        return constrain(out, ("batch", "res_seq", "embed"))
-    h = x @ w_up
-    h = constrain(h, ("batch", "seq", "ffn"))
-    if w_gate is not None:
-        h = act(h) * (x @ w_gate)
-    else:
-        h = act(h)
-    out = h @ w_down
+    # inactive patterns (dp=1) dispatch through the identity family — one
+    # dense-FFN body lives in the registry instead of being duplicated here
+    fam = plan_mod.get_family(bp.family if bp.active else "identity")
+    out = fam.apply_ffn(x, w_up, w_down, w_gate, dp=bp.dp, bias=bp.bias,
+                        nb=bp.nb, backend=bp.backend, act=act)
     return constrain(out, ("batch", "res_seq", "embed"))
 
 

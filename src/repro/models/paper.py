@@ -51,7 +51,19 @@ def mlp_apply_rdp(params, x, dps: tuple, biases, block: int = 1):
             w = jnp.take(w, prev_idx, axis=0)
         if i < len(dps):                       # hidden layer with dropout
             dp = dps[i]
-            idx = P.kept_unit_indices(lp["w"].shape[1], dp, biases[i], block)
+            d_hid = lp["w"].shape[1]
+            # the kept-unit index set (used for the bias gather here AND the
+            # next layer's row compaction) is only period-exact when the
+            # width splits into whole dp-divisible block groups — check up
+            # front with a clear error (mirrors DropoutPlan.validate_mesh)
+            if dp > 1 and d_hid % (dp * block) != 0:
+                raise ValueError(
+                    f"hidden layer {i}: width {d_hid} is not divisible by "
+                    f"dp*block = {dp}*{block} — the kept-unit count would "
+                    f"be bias-dependent and the next layer's row "
+                    f"compaction would mis-align; pick dp/block with "
+                    f"d_hid % (dp*block) == 0")
+            idx = P.kept_unit_indices(d_hid, dp, biases[i], block)
             w = jnp.take(w, idx, axis=1)
             h = jax.nn.relu(h @ w + jnp.take(b, idx)) * dp
             prev_idx = idx

@@ -246,6 +246,24 @@ def init_lm(cfg: ModelConfig):
     return params, axes
 
 
+def batch_logical_axes(cfg: ModelConfig, batch) -> dict:
+    """Logical-axes twin of a training batch pytree.
+
+    The batch layout is model-defined (codebook archs carry [B, K, S]
+    token/label tensors, vision archs add an embeddings leaf), so the axes
+    mapping lives here next to ``forward``.  ``DistributedTrainer`` turns
+    this into explicit input shardings: the leading dim shards over the
+    batch mesh axes, everything else is replicated."""
+    def ax(path, x):
+        name = str(getattr(path[-1], "key", path[-1]))
+        if name == "vision_embeds":                  # [B, T_v, d_vision]
+            return ("batch", "seq", None)
+        if cfg.n_codebooks and x.ndim == 3:          # [B, K, S]
+            return ("batch", None, "seq")
+        return ("batch",) + ("seq",) * (x.ndim - 1)  # [B, S] tokens/labels
+    return jax.tree_util.tree_map_with_path(ax, batch)
+
+
 # --------------------------------------------------------------------------
 # forward (train / prefill trunk)
 # --------------------------------------------------------------------------

@@ -83,6 +83,22 @@ def _pspec_for(shape: Sequence[int], axes: Axes, mesh: Mesh,
     return PSpec(*parts)
 
 
+def rule_shard_axes(name: str, mesh: Mesh, rules: ShardingRules,
+                    is_param: bool = False) -> tuple[tuple, int]:
+    """Resolve a logical axis to the mesh axes it shards over on ``mesh``.
+
+    Returns ``(mesh_axes, total_size)`` — axes absent from the mesh are
+    dropped (matching ``_pspec_for``).  ``total_size`` is the divisibility
+    requirement a tensor dim must meet to actually shard (rather than hit
+    the silent replication fallback)."""
+    spec = rules.lookup(name, is_param)
+    if spec is None:
+        return (), 1
+    flat = tuple(a for a in ((spec,) if isinstance(spec, str) else spec)
+                 if a in mesh.axis_names)
+    return flat, int(np.prod([mesh.shape[a] for a in flat])) if flat else 1
+
+
 def logical_sharding(shape: Sequence[int], axes: Axes, mesh: Mesh,
                      rules: ShardingRules, is_param: bool = True
                      ) -> NamedSharding:
@@ -146,6 +162,13 @@ _BASE_ACT_RULES = {
     "kv_seq": None,             # attention k/v seq (gathered under SP)
     "embed": None,
     "ffn": "model",
+    # compact pattern-FFN hidden activations (kept 1/dp of 'ffn').  Same
+    # mesh mapping as 'ffn', but a distinct logical axis so DropoutPlan can
+    # validate per-bucket divisibility of the SHRUNK dim (d_ff/dp) against
+    # the mesh at construction time — without it, a kept dim that stops
+    # dividing the 'model' axis silently falls back to replication in
+    # ``_pspec_for`` and the compact matmul runs unsharded.
+    "ffn_kept": "model",
     "heads": "model",
     "kv_heads": "model",
     "head_dim": None,
@@ -212,7 +235,9 @@ def zero1_opt_sharding(param_sharding: NamedSharding, shape) -> NamedSharding:
     spec = list(param_sharding.spec) + [None] * (len(shape) - len(param_sharding.spec))
     used = {a for s in spec if s is not None
             for a in ((s,) if isinstance(s, str) else s)}
-    if "data" not in used:
+    # a mesh without a 'data' axis (e.g. pure-TP) simply gets no ZeRO-1 —
+    # same drop-absent-axes convention as _pspec_for
+    if "data" in mesh.axis_names and "data" not in used:
         for i, (dim, s) in enumerate(zip(shape, spec)):
             if s is None and dim % mesh.shape["data"] == 0:
                 spec[i] = "data"

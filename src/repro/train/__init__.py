@@ -1,3 +1,8 @@
-"""Training: distributed step, driver loop, checkpointing."""
+"""Training: distributed step, mesh-aware trainer, checkpointing."""
 from .train_step import make_train_step
-__all__ = ["make_train_step"]
+from .distributed import (DistributedTrainer, TrainState, TrainerConfig,
+                          state_logical_axes, state_shardings)
+from .loop import Trainer
+
+__all__ = ["DistributedTrainer", "TrainState", "Trainer", "TrainerConfig",
+           "make_train_step", "state_logical_axes", "state_shardings"]

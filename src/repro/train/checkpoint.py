@@ -30,7 +30,11 @@ import numpy as np
 
 def _flatten_with_names(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+    # DictKey has .key, SequenceKey has .idx, GetAttrKey (registered
+    # dataclasses like TrainState) has .name
+    names = ["/".join(str(getattr(k, "key",
+                                  getattr(k, "idx",
+                                          getattr(k, "name", k))))
                       for k in path) for path, _ in flat]
     return names, [leaf for _, leaf in flat], treedef
 

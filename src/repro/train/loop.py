@@ -5,164 +5,50 @@ The loop owns the host-side pieces the paper's system needs at scale:
     distribution K and dispatches to the per-bucket compiled executable
     (compile-once, reuse forever; bucket count = |support(K)| × dp biases).
   * **checkpoint/restart** — async atomic checkpoints every N steps;
-    auto-resume restores params/opt AND the step counter, and the
+    auto-resume restores the full TrainState AND the step counter, and the
     deterministic pipeline replays the exact stream.
   * **straggler watchdog** — EMA step-time anomaly detection; on a real
     multi-controller deployment the hook triggers host eviction/re-layout,
     here it logs and counts (tested by fault-injection in tests/).
+
+Since the mesh-aware refactor (DESIGN.md §10) the machinery lives in
+``train/distributed.py``: ``DistributedTrainer`` runs one explicitly
+sharded executable per (dp, bias) bucket on any mesh × ``ShardingRules``
+profile.  ``Trainer`` below is that class on the host mesh — the same code
+path from a 1-CPU-device test to a pod.
+
+Pattern configuration is a ``core.plan.DropoutPlan`` (the legacy
+``PatternSchedule`` shim now lives only in ``core/sampler.py`` and warns on
+use — migrate with ``schedule.to_plan(...)`` or ``build_plan``).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
-
-from repro.core import plan as plan_mod
-from repro.core.plan import DropoutPlan, identity_plan
-from repro.core.sampler import PatternSchedule
+from repro.core.plan import DropoutPlan
+from repro.launch.mesh import make_host_mesh
 from repro.models.transformer import ModelConfig
-from repro.optim.optimizers import cosine_schedule
-from repro.train import checkpoint as ckpt_lib
-from repro.train.train_step import make_train_step
+from repro.train.distributed import (DistributedTrainer,  # noqa: F401
+                                     StragglerWatchdog, TrainState,
+                                     TrainerConfig)
 
 
-@dataclasses.dataclass
-class StragglerWatchdog:
-    """Flags steps slower than mean + tolerance·std of an EMA estimate."""
-    ema: float = 0.0
-    var: float = 0.0
-    beta: float = 0.9
-    tolerance: float = 4.0
-    warmup: int = 5
-    seen: int = 0
-    flagged: int = 0
+class Trainer(DistributedTrainer):
+    """Single-host trainer: ``DistributedTrainer`` on ``make_host_mesh()``.
 
-    def observe(self, dt: float) -> bool:
-        self.seen += 1
-        if self.seen <= self.warmup:
-            self.ema = dt if self.seen == 1 else \
-                self.beta * self.ema + (1 - self.beta) * dt
-            return False
-        mean = self.ema
-        self.ema = self.beta * self.ema + (1 - self.beta) * dt
-        dev = abs(dt - mean)
-        self.var = self.beta * self.var + (1 - self.beta) * dev * dev
-        slow = dt > mean + self.tolerance * max(self.var ** 0.5, 1e-4)
-        if slow:
-            self.flagged += 1
-        return slow
-
-
-@dataclasses.dataclass
-class TrainerConfig:
-    steps: int = 100
-    base_lr: float = 3e-4
-    warmup: int = 10
-    ckpt_every: int = 50
-    ckpt_dir: Optional[str] = None
-    clip_norm: float = 1.0
-    microbatches: int = 1
-    compress_grads: bool = False
-    log_every: int = 10
-
-
-class Trainer:
-    """Single-host trainer (the pjit path reuses the same step builders)."""
+    Kept as the convenience entry point (tests, examples, the paper-scale
+    smoke runs); every step still goes through the mesh-aware path with
+    explicit shardings — on a 1-device host mesh they all resolve to that
+    device, so numerics and ergonomics are unchanged.
+    """
 
     def __init__(self, cfg: ModelConfig, optimizer, params,
-                 schedule: Optional[PatternSchedule] = None,
-                 tcfg: TrainerConfig = TrainerConfig(),
-                 plan: Optional[DropoutPlan] = None):
-        self.cfg = cfg
-        self.optimizer = optimizer
-        self.params = params
-        self.opt_state = optimizer.init(params)
-        # DropoutPlan is the canonical configuration; a legacy
-        # ``schedule=PatternSchedule`` is lifted into a plan (shim), with
-        # nb pinned to the model's pattern blocking either way.
-        if plan is not None:
-            self.plan = plan.with_nb(cfg.pattern_nb)
-        elif schedule is not None:
-            self.plan = schedule.to_plan(nb=cfg.pattern_nb, backend="slice")
-        else:
-            self.plan = identity_plan(nb=cfg.pattern_nb)
-        # training needs grads through the pattern matmuls — reject an
-        # inference-only backend here rather than deep inside jax.grad
-        # ("slice"/"gather" differentiate via XLA autodiff, "pallas" via
-        # the custom-VJP compact kernels in kernels/autodiff.py)
-        if not plan_mod.BACKENDS[self.plan.backend].differentiable:
-            raise ValueError(
-                f"pattern backend {self.plan.backend!r} is not "
-                f"differentiable and cannot be used for training")
-        self.tcfg = tcfg
-        self.lr_fn = cosine_schedule(tcfg.base_lr, tcfg.warmup, tcfg.steps)
-        self._buckets: dict[tuple, Callable] = {}
-        self.watchdog = StragglerWatchdog()
-        self.async_ckpt = ckpt_lib.AsyncCheckpointer()
-        self.start_step = 0
-        self.history: list[dict] = []
+                 tcfg: Optional[TrainerConfig] = None,
+                 plan: Optional[DropoutPlan] = None, **kwargs):
+        super().__init__(cfg, optimizer, params, mesh=make_host_mesh(),
+                         profile=kwargs.pop("profile", "tp"), plan=plan,
+                         tcfg=tcfg, **kwargs)
 
-    # ---- pattern bucketing ------------------------------------------------
-    def _step_fn(self, dp: int, bias: int) -> Callable:
-        key = (dp, bias)
-        if key not in self._buckets:
-            pat = self.plan.bind(dp, bias) if dp > 1 else plan_mod.IDENTITY
-            step = make_train_step(
-                self.cfg, self.optimizer,
-                microbatches=self.tcfg.microbatches, pat=pat,
-                clip_norm=self.tcfg.clip_norm,
-                compress_grads=self.tcfg.compress_grads)
-            self._buckets[key] = jax.jit(step, donate_argnums=(0, 1))
-        return self._buckets[key]
 
-    # ---- fault tolerance --------------------------------------------------
-    def maybe_resume(self):
-        if not self.tcfg.ckpt_dir:
-            return
-        state = {"params": self.params, "opt": self.opt_state}
-        step, restored = ckpt_lib.restore_latest(self.tcfg.ckpt_dir, state)
-        if restored is not None:
-            self.params = restored["params"]
-            self.opt_state = restored["opt"]
-            self.start_step = step + 1
-
-    def _maybe_checkpoint(self, step: int, force: bool = False):
-        if not self.tcfg.ckpt_dir:
-            return
-        if force or (step + 1) % self.tcfg.ckpt_every == 0:
-            self.async_ckpt.save_async(
-                self.tcfg.ckpt_dir, step,
-                {"params": self.params, "opt": self.opt_state})
-
-    # ---- the loop ----------------------------------------------------------
-    def run(self, batch_fn: Callable[[int], dict],
-            until: Optional[int] = None) -> list[dict]:
-        until = until or self.tcfg.steps
-        self.maybe_resume()
-        for step in range(self.start_step, until):
-            bound = self.plan.sample(step)
-            fn = self._step_fn(bound.dp, bound.bias)
-            batch = jax.tree.map(jax.numpy.asarray, batch_fn(step))
-            t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = fn(
-                self.params, self.opt_state, batch,
-                jax.numpy.float32(self.lr_fn(step)))
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
-            slow = self.watchdog.observe(dt)
-            rec = {"step": step, "loss": float(metrics["loss"]),
-                   "dp": bound.dp, "bias": bound.bias, "dt": dt,
-                   "straggler": slow}
-            self.history.append(rec)
-            if step % self.tcfg.log_every == 0:
-                print(f"step {step}: loss={rec['loss']:.4f} dp={bound.dp} "
-                      f"dt={dt*1e3:.0f}ms" + (" [STRAGGLER]" if slow else ""),
-                      flush=True)
-            self._maybe_checkpoint(step)
-        self.async_ckpt.wait()
-        if self.tcfg.ckpt_dir:
-            ckpt_lib.save(self.tcfg.ckpt_dir, until - 1,
-                          {"params": self.params, "opt": self.opt_state})
-        return self.history
+__all__ = ["DistributedTrainer", "StragglerWatchdog", "Trainer",
+           "TrainState", "TrainerConfig"]

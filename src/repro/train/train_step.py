@@ -41,9 +41,12 @@ def make_train_step(cfg: ModelConfig, optimizer, *, microbatches: int = 1,
                     pat=NO_PATTERN, clip_norm: float = 1.0,
                     compress_grads: bool = False, acc_shardings=None):
     """``acc_shardings``: optional pytree of NamedShardings for the f32
-    grad-accumulation buffers (normally the ZeRO-1 optimizer shardings).
+    grad-accumulation buffers (normally the ZeRO-1 optimizer shardings —
+    ``DistributedTrainer`` wires its ``zero1_opt_sharding`` layout in here).
     Without it XLA may keep the scan-carried grads replicated and all-gather
-    every per-micro partial grad (measured: +0.4 TB/device on deepseek)."""
+    every per-micro partial grad (measured: +0.4 TB/device on deepseek).
+    The same constraint is applied to the single-microbatch grads, so the
+    backward's partial sums reduce straight into ZeRO-1 shards there too."""
     def loss_fn(params, mb):
         loss, metrics = lm_loss(cfg, params, mb, pat)
         return loss, metrics
@@ -77,7 +80,8 @@ def make_train_step(cfg: ModelConfig, optimizer, *, microbatches: int = 1,
             (grads, loss), _ = jax.lax.scan(acc_body, (g0, 0.0), micro)
         else:
             (loss, _), grads = grad_fn(params, batch)
-            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            grads = _constrain_acc(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads))
 
         if compress_grads:
             grads = terngrad_compress_decompress(grads)

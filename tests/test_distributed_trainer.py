@@ -1,0 +1,258 @@
+"""Mesh-aware DistributedTrainer: plan × profile divisibility validation,
+sharded-vs-single-device agreement, elastic sharded checkpoints, bucket
+compile-cache accounting.  Multi-device cases run in subprocesses with
+forced host devices (see tests/test_sharding.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from tests.test_sharding import run_in_devices
+
+
+# --------------------------------------------------------------------------
+# dp × TP divisibility validation (plan.validate_mesh)
+# --------------------------------------------------------------------------
+
+def test_mesh_divisibility_matrix_all_profiles():
+    """Every (dp, b) bucket × every PROFILES entry either validates cleanly
+    or raises the MeshDivisibilityError with an actionable message."""
+    run_in_devices(8, """
+        import jax
+        from repro.core.plan import DropoutPlan, MeshDivisibilityError
+        from repro.parallel.sharding import PROFILES
+
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        ok_plan = DropoutPlan(family="rdp", dist=(0.25, 0.25, 0.0, 0.5),
+                              nb=8, block=32)
+        bad_plan = DropoutPlan(family="rdp", dist=(0.0, 0.5, 0.0, 0.5),
+                               nb=4, block=12)
+        n_err = 0
+        for name, rules in PROFILES.items():
+            # well-blocked kept dims (256/dp) construct cleanly everywhere
+            ok_plan.validate_mesh(mesh, rules, dims={"ffn_kept": 256})
+            # d_ff=48: the dp=4 bucket keeps 12, which does not divide the
+            # 8-way 'model' axis -> must raise, not silently replicate
+            try:
+                bad_plan.validate_mesh(mesh, rules, dims={"ffn_kept": 48})
+            except MeshDivisibilityError as e:
+                msg = str(e)
+                assert "ffn_kept" in msg and "dp=4" in msg, (name, msg)
+                assert "Fix:" in msg, (name, msg)
+                n_err += 1
+        # every profile maps 'ffn_kept' onto the model axis, so all raise
+        assert n_err == len(PROFILES), (n_err, len(PROFILES))
+        print("matrix ok")
+    """)
+
+
+def test_trainer_construction_rejects_non_divisible_plan():
+    run_in_devices(8, """
+        import jax
+        from repro.configs import get_smoke
+        from repro.core.plan import DropoutPlan, MeshDivisibilityError
+        from repro.models import init_lm, materialize
+        from repro.optim.optimizers import AdamW
+        from repro.train.distributed import DistributedTrainer
+        import dataclasses
+
+        # shrink d_ff so dp=4 keeps 10 on an 8-way model axis: 10 % 8 != 0
+        cfg = dataclasses.replace(get_smoke("qwen2_1_5b"), d_ff=40,
+                                  pattern_nb=4)
+        params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+        plan = DropoutPlan(family="rdp", dist=(0.0, 0.5, 0.0, 0.5), nb=4,
+                           block=10)
+        mesh = jax.make_mesh((1, 8), ("data", "model"))
+        try:
+            DistributedTrainer(cfg, AdamW(), params, mesh=mesh,
+                               profile="tp", plan=plan)
+            raise AssertionError("expected MeshDivisibilityError")
+        except MeshDivisibilityError as e:
+            assert "ffn_kept" in str(e), e
+        print("rejected ok")
+    """)
+
+
+def test_mesh_from_spec():
+    from repro.launch.mesh import mesh_from_spec
+    m = mesh_from_spec("1x1")
+    assert m.axis_names == ("data", "model")
+    with pytest.raises(ValueError, match="mesh spec"):
+        mesh_from_spec("8")
+
+
+# --------------------------------------------------------------------------
+# sharded vs single device: losses, grads, compile-cache accounting
+# --------------------------------------------------------------------------
+
+def test_sharded_trainer_matches_single_device():
+    """Acceptance: profile 'tp' over dp in {1,2,4} trains >= 20 steps on a
+    2x4 mesh; per-bucket losses match the single-device trainer to <=1e-5;
+    the compile cache holds exactly |buckets()| executables."""
+    run_in_devices(8, """
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke
+        from repro.core.plan import DropoutPlan
+        from repro.data.pipeline import SyntheticLMData
+        from repro.models import init_lm, materialize
+        from repro.optim.optimizers import AdamW
+        from repro.train.distributed import DistributedTrainer, TrainerConfig
+
+        cfg = dataclasses.replace(get_smoke("qwen2_1_5b"), dtype="float32")
+        params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+        plan = DropoutPlan(family="rdp", dist=(0.4, 0.3, 0.0, 0.3),
+                           nb=cfg.pattern_nb,
+                           block=cfg.d_ff // cfg.pattern_nb)
+        data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=8)
+
+        def mk(mesh):
+            return DistributedTrainer(
+                cfg, AdamW(), jax.tree.map(jnp.copy, params), mesh=mesh,
+                profile="tp", plan=plan,
+                tcfg=TrainerConfig(steps=21, log_every=1000))
+
+        ta = mk(jax.make_mesh((2, 4), ("data", "model")))
+        ta.warm_start(data.batch)
+        assert len(ta._buckets) == len(plan.buckets()), \\
+            (sorted(ta._buckets), plan.buckets())
+        ha = ta.run(data.batch)
+        # warm_start covered the full bucket universe: no new compiles
+        assert len(ta._buckets) == len(plan.buckets())
+
+        tb = mk(jax.make_mesh((1, 1), ("data", "model")))
+        hb = tb.run(data.batch)
+        assert len(ha) == len(hb) == 21
+        assert len({h["dp"] for h in ha}) == 3   # all of dp 1, 2, 4 sampled
+        for a, b in zip(ha, hb):
+            assert (a["dp"], a["bias"]) == (b["dp"], b["bias"])
+            np.testing.assert_allclose(a["loss"], b["loss"], rtol=0,
+                                       atol=1e-5)
+        for pa, pb in zip(jax.tree.leaves(ta.state.params),
+                          jax.tree.leaves(tb.state.params)):
+            np.testing.assert_allclose(np.asarray(pa), np.asarray(pb),
+                                       atol=1e-4, rtol=1e-3)
+        print("agree ok")
+    """)
+
+
+def test_sharded_grads_match_single_device_per_bucket():
+    run_in_devices(8, """
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke
+        from repro.core.plan import DropoutPlan
+        from repro.data.pipeline import SyntheticLMData
+        from repro.models import init_lm, materialize
+        from repro.models.transformer import lm_loss
+        from repro.parallel.sharding import PROFILES, set_mesh_and_rules
+
+        cfg = dataclasses.replace(get_smoke("qwen2_1_5b"), dtype="float32")
+        params = materialize(jax.random.PRNGKey(1), init_lm(cfg)[0])
+        plan = DropoutPlan(family="rdp", dist=(0.4, 0.3, 0.0, 0.3),
+                           nb=cfg.pattern_nb,
+                           block=cfg.d_ff // cfg.pattern_nb)
+        data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=8)
+        batch = jax.tree.map(jnp.asarray, data.batch(0))
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = PROFILES["tp"]
+
+        for dp, b in plan.buckets():
+            pat = plan.bind(dp, b)
+
+            def vg(p, mb, pat=pat):
+                return jax.value_and_grad(
+                    lambda q: lm_loss(cfg, q, mb, pat)[0])(p)
+
+            l1, g1 = jax.jit(vg)(params, batch)
+            # a SEPARATE jit traced under the ambient mesh/rules so the
+            # ffn_kept/batch constraints are baked into this executable
+            with set_mesh_and_rules(mesh, rules):
+                l2, g2 = jax.jit(vg)(params, batch)
+            np.testing.assert_allclose(float(l1), float(l2), rtol=0,
+                                       atol=1e-5)
+            for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                           atol=1e-5, rtol=1e-5)
+        print("grads ok")
+    """)
+
+
+# --------------------------------------------------------------------------
+# elastic sharded checkpoints
+# --------------------------------------------------------------------------
+
+def test_sharded_checkpoint_restores_on_different_mesh(tmp_path):
+    run_in_devices(8, f"""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke
+        from repro.core.plan import DropoutPlan
+        from repro.data.pipeline import SyntheticLMData
+        from repro.models import init_lm, materialize
+        from repro.optim.optimizers import AdamW
+        from repro.train.distributed import DistributedTrainer, TrainerConfig
+
+        cfg = dataclasses.replace(get_smoke("qwen2_1_5b"), dtype="float32")
+        params = materialize(jax.random.PRNGKey(1), init_lm(cfg)[0])
+        plan = DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=cfg.pattern_nb,
+                           block=cfg.d_ff // cfg.pattern_nb)
+        data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=8)
+
+        def mk(mesh, steps):
+            return DistributedTrainer(
+                cfg, AdamW(), jax.tree.map(jnp.copy, params), mesh=mesh,
+                profile="tp", plan=plan,
+                tcfg=TrainerConfig(steps=steps, ckpt_every=2,
+                                   ckpt_dir=r"{tmp_path}", log_every=1000))
+
+        ta = mk(jax.make_mesh((2, 4), ("data", "model")), 4)
+        ta.run(data.batch)
+        # restart on a DIFFERENT topology: unsharded storage re-shards on
+        # load with the new mesh's shardings (the elastic contract)
+        tb = mk(jax.make_mesh((4, 2), ("data", "model")), 6)
+        tb.maybe_resume()
+        assert tb.start_step == 4 and int(tb.state.step) == 4
+        for pa, pb in zip(jax.tree.leaves(ta.state.params),
+                          jax.tree.leaves(tb.state.params)):
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+        sh = jax.tree.leaves(tb.state.params)[0].sharding
+        assert dict(sh.mesh.shape) == {{"data": 4, "model": 2}}
+        hb = tb.run(data.batch)
+        assert [r["step"] for r in hb] == [4, 5]
+        assert all(np.isfinite(r["loss"]) for r in hb)
+        print("elastic trainer ok")
+    """)
+
+
+# --------------------------------------------------------------------------
+# satellites: per-instance TrainerConfig; mlp_apply_rdp divisibility guard
+# --------------------------------------------------------------------------
+
+def test_trainer_config_default_is_per_instance():
+    """Regression: the old ``tcfg: TrainerConfig = TrainerConfig()`` default
+    was ONE shared instance mutated across every Trainer."""
+    from repro.configs import get_smoke
+    from repro.models import init_lm, materialize
+    from repro.optim.optimizers import AdamW
+    from repro.train.loop import Trainer
+
+    cfg = get_smoke("qwen2_1_5b")
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    t1 = Trainer(cfg, AdamW(), params)
+    t1.tcfg.steps = 12345
+    t2 = Trainer(cfg, AdamW(), params)
+    assert t1.tcfg is not t2.tcfg
+    assert t2.tcfg.steps != 12345
+
+
+def test_mlp_rdp_rejects_non_divisible_width():
+    from repro.models.paper import init_mlp, mlp_apply_rdp
+
+    params = init_mlp(jax.random.PRNGKey(0), (8, 12, 10))
+    x = jnp.ones((2, 8))
+    with pytest.raises(ValueError, match="not divisible"):
+        mlp_apply_rdp(params, x, (8,), (0,), block=1)   # 12 % 8 != 0
+    out = mlp_apply_rdp(params, x, (4,), (1,), block=1)  # 12 % 4 == 0
+    assert out.shape == (2, 10)
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke
-from repro.core.sampler import build_schedule
+from repro.core.plan import build_plan
 from repro.data.pipeline import SyntheticLMData
 from repro.models import init_lm, materialize
 from repro.optim.optimizers import AdamW
@@ -19,12 +19,12 @@ def _mk_trainer(tmp, steps=6, ckpt_every=2, dropout=0.5, seed=0,
                 compress=False):
     cfg = get_smoke("qwen2_1_5b")
     params = materialize(jax.random.PRNGKey(seed), init_lm(cfg)[0])
-    sched = build_schedule("rdp", dropout, n_units_blocks=8, dp_max=8,
-                           block=cfg.pattern_nb, seed=seed)
+    plan = build_plan("rdp", dropout, nb=cfg.pattern_nb, dp_max=8,
+                      block=cfg.d_ff // cfg.pattern_nb, seed=seed)
     tcfg = TrainerConfig(steps=steps, base_lr=1e-3, ckpt_every=ckpt_every,
                          ckpt_dir=str(tmp), log_every=100,
                          compress_grads=compress)
-    return Trainer(cfg, AdamW(), params, schedule=sched, tcfg=tcfg), cfg
+    return Trainer(cfg, AdamW(), params, plan=plan, tcfg=tcfg), cfg
 
 
 def _data(cfg):
