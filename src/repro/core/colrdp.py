@@ -31,6 +31,7 @@ class ColRdpFamily(PatternFamily):
     """RDP over the FFN *input* dimension (column-structured)."""
 
     name = "col_rdp"
+    granularity = "column"
     # no compact-DMA kernel exists for input-dim slicing yet, so requesting
     # "pallas" raises at construction instead of silently running XLA
     backends = ("slice", "gather")

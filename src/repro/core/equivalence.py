@@ -1,24 +1,48 @@
-"""Statistical-equivalence verifier (paper Eq. 2–3).
+"""Statistical-equivalence verifier (paper Eq. 2–3), granularity-generic.
 
 Claim: with ``dp ~ K`` and bias ``b ~ Uniform{0..dp-1}``, the marginal drop
 probability of every single unit equals the global rate
 
     p_n = Σ_i k_i · (i-1)/i  =  p_g  ≈  p_target.
 
-This module verifies the claim two ways:
+The claim is about *units* — and what a unit is depends on the pattern
+family: an FFN hidden neuron (rdp), an input feature (col_rdp), an SSM
+state channel (ssm_row), an attention KV-group (head_rdp), an expert
+(expert_drop).  Rather than hardcoding the FFN-column enumeration, this
+module asks each family for its kept-unit set via the registry contract
+``PatternFamily.kept_units(dim, dp, bias, block)`` and verifies the claim
+two ways:
 
 * **exactly** — for each unit position, sum over (dp, b) of
   P(dp)·P(b)·[unit dropped under (dp, b)]; asserts the marginal is *uniform*
   across positions and equals p_g.
 * **Monte-Carlo** — drive the real sampler (a ``DropoutPlan`` or the legacy
   ``PatternSchedule`` shim) for T steps and count empirical per-unit drop
-  frequencies (this also exercises the sampler's determinism path).
+  frequencies (this also exercises the sampler's determinism path).  The
+  default tolerance is a binomial confidence bound derived from ``steps``
+  rather than a magic constant, so sweeps over many families don't flake.
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
-from .patterns import np_kept_indices
+from .plan import PatternFamily, get_family
+
+
+def _resolve_family(family) -> PatternFamily:
+    """Accept a family instance, a registered name, or None (→ ``rdp``)."""
+    if isinstance(family, PatternFamily):
+        return family
+    return get_family(family or "rdp")
+
+
+def _sched_family(sched) -> PatternFamily:
+    """The family a schedule samples for: ``DropoutPlan.family`` (name) or
+    the legacy ``PatternSchedule.kind``; absent both, the ``rdp`` default."""
+    name = getattr(sched, "family", None) or getattr(sched, "kind", None)
+    return _resolve_family(name)
 
 
 def _draw(sched, step: int) -> tuple[int, int]:
@@ -30,12 +54,25 @@ def _draw(sched, step: int) -> tuple[int, int]:
     return s.dp, s.bias                  # BoundPlan
 
 
-def exact_unit_drop_marginals(dist: np.ndarray, dim: int, block: int = 1
-                              ) -> np.ndarray:
+def mc_tolerance(p_g: float, steps: int, z: float = 5.0) -> float:
+    """Binomial-CI bound on the max per-unit MC deviation: each unit's
+    empirical drop frequency over ``steps`` deterministic-sampler draws is
+    a mean of Bernoulli(p_g) indicators, so z·sqrt(p_g(1-p_g)/steps) bounds
+    the deviation at z sigmas (z=5 keeps the whole registry sweep far below
+    one expected flake).  A small floor covers the p_g→{0,1} edges."""
+    var = max(p_g * (1.0 - p_g), 1e-4)
+    return z * math.sqrt(var / max(steps, 1))
+
+
+def exact_unit_drop_marginals(dist: np.ndarray, dim: int, block: int = 1,
+                              family=None) -> np.ndarray:
     """P(unit u dropped) for every u, marginalized over dp ~ dist and b
-    uniform — computed exactly.  Requires divisor periods (as the sampler
-    enforces); under that constraint each unit is kept by exactly 1/dp of
-    the biases, giving a constant marginal."""
+    uniform — computed exactly from the family's kept-unit enumeration
+    (``family``: instance, registered name, or None → ``rdp``).  Requires
+    divisor periods (as the sampler enforces); under that constraint each
+    unit is kept by exactly 1/dp of the biases, giving a constant
+    marginal."""
+    fam = _resolve_family(family)
     nb = dim // block
     drop = np.zeros(dim, np.float64)
     for i, k in enumerate(np.asarray(dist, np.float64)):
@@ -46,7 +83,7 @@ def exact_unit_drop_marginals(dist: np.ndarray, dim: int, block: int = 1
             raise ValueError(f"period {dp} does not divide {nb} blocks")
         per_b = np.ones(dim, np.float64)
         for b in range(dp):
-            kept = np_kept_indices(dim, dp, b, block)
+            kept = fam.kept_units(dim, dp, b, block)
             m = np.ones(dim, np.float64)
             m[kept] = 0.0
             per_b += m
@@ -57,12 +94,14 @@ def exact_unit_drop_marginals(dist: np.ndarray, dim: int, block: int = 1
 
 def empirical_unit_drop_marginals(sched, dim: int,
                                   steps: int = 4000) -> np.ndarray:
-    """Monte-Carlo per-unit drop frequency over ``steps`` sampled patterns.
+    """Monte-Carlo per-unit drop frequency over ``steps`` sampled patterns,
+    counted through the schedule's own family's kept-unit enumeration.
     ``sched``: a DropoutPlan or legacy PatternSchedule."""
+    fam = _sched_family(sched)
     counts = np.zeros(dim, np.float64)
     for t in range(steps):
         dp, b = _draw(sched, t)
-        kept = np_kept_indices(dim, dp, b, sched.block)
+        kept = fam.kept_units(dim, dp, b, sched.block)
         m = np.ones(dim, np.float64)
         m[kept] = 0.0
         counts += m
@@ -70,12 +109,15 @@ def empirical_unit_drop_marginals(sched, dim: int,
 
 
 def check_equivalence(sched, dim: int, target: float,
-                      steps: int = 4000, mc_tol: float = 0.03,
+                      steps: int = 4000, mc_tol: float | None = None,
                       exact_tol: float = 1e-9) -> dict:
     """Returns a report dict; raises AssertionError on violation.
-    ``sched``: a DropoutPlan or legacy PatternSchedule."""
+    ``sched``: a DropoutPlan or legacy PatternSchedule — any registered
+    family.  ``mc_tol=None`` (default) derives the Monte-Carlo tolerance
+    from ``steps`` via :func:`mc_tolerance`."""
     dist = np.asarray(sched.dist, np.float64)
-    exact = exact_unit_drop_marginals(dist, dim, sched.block)
+    fam = _sched_family(sched)
+    exact = exact_unit_drop_marginals(dist, dim, sched.block, family=fam)
     p_g = float(np.dot(dist,
                        (np.arange(1, sched.n_patterns + 1) - 1.0)
                        / np.arange(1, sched.n_patterns + 1)))
@@ -86,9 +128,13 @@ def check_equivalence(sched, dim: int, target: float,
         f"marginal {exact[0]} != global rate {p_g}"
     # (2) the searched distribution hits the target rate
     rate_err = abs(p_g - target)
-    # (3) Monte-Carlo agrees
+    # (3) Monte-Carlo agrees, within a binomial confidence bound
+    if mc_tol is None:
+        mc_tol = mc_tolerance(p_g, steps)
     emp = empirical_unit_drop_marginals(sched, dim, steps)
     mc_err = float(np.max(np.abs(emp - p_g)))
-    assert mc_err < mc_tol, f"Monte-Carlo marginal off by {mc_err}"
+    assert mc_err < mc_tol, \
+        f"Monte-Carlo marginal off by {mc_err} (tol {mc_tol})"
     return {"global_rate": p_g, "target": target, "rate_err": rate_err,
-            "mc_max_err": mc_err, "uniform": True}
+            "mc_max_err": mc_err, "mc_tol": float(mc_tol),
+            "family": fam.name, "uniform": True}

@@ -1,0 +1,94 @@
+"""Scenario pattern families: SSM state rows, attention heads, MoE experts.
+
+The paper's headline results cover recurrent networks as well as MLPs
+(§IV-C: 19-60% LSTM training-time reduction), but until this module the
+registry only compacted FFN hidden columns/rows.  These three families
+carry the same strided-keep math to the remaining assigned scenarios:
+
+* ``ssm_row``    — row dropout over the SSM/recurrent *state* dimension
+  (the d_state channels of B and C in Mamba2/SSD).  Exact compaction: the
+  SSD recurrence ``h[n] = exp(dtA) h[n] + dt B[n] x`` is elementwise in
+  the state index n, so keeping 1/dp of the B/C channels equals masking
+  the dropped channels to zero — the "structured in space" row-dropout
+  granularity for recurrent state (PAPERS.md).
+* ``head_rdp``   — whole attention heads dropped at KV-group granularity
+  (one KV head + its GQA query-head group per unit), so kept heads run as
+  compact blocks through the unchanged blockwise attention.  Per-head
+  softmax independence makes the masked-head oracle exact.
+* ``expert_drop``— whole MoE experts dropped before routing: the router
+  logits, w_up/w_gate/w_down expert slices of dropped experts are removed
+  up front, so dropped experts are *never dispatched* (no capacity
+  buffers, no all_to_all bytes in the EP path).  The router softmax
+  renormalizes over kept experts, so no inverted-dropout scale applies.
+
+All three subclass ``RdpFamily``: on a plain FFN their dropped unit *is* a
+hidden-neuron block, so they inherit the compact slice/gather/pallas
+``apply_ffn`` (custom-VJP backward included — kernels/autodiff.py) and the
+mask-multiply ``oracle_ffn`` unchanged.  What distinguishes a family is its
+capability flags (``ssm_state_granular`` / ``attn_head_granular`` /
+``expert_granular``, plus the inherited ``head_granular`` on ``head_rdp``),
+which route the model blocks in ``models/layers.py`` — zero call-site
+edits, exactly like ``core/colrdp.py``.  The kept-unit enumeration each
+family exposes for the statistical-equivalence oracle is the shared
+strided default (``PatternFamily.kept_units``).
+"""
+from __future__ import annotations
+
+from .plan import RdpFamily, register_family
+
+
+@register_family
+class SsmRowFamily(RdpFamily):
+    """Row dropout over the SSM state dimension (d_state channels of B/C).
+
+    In ``mamba2_block`` the kept state channels are sliced out of the
+    in_proj B/C column ranges and the matching conv channels; the SSD
+    output is scaled by dp (inverted dropout) while the D-skip term —
+    which never touches the state — stays unscaled.  On a plain FFN the
+    family behaves as strided hidden-row dropout (inherited from rdp).
+    """
+
+    name = "ssm_row"
+    granularity = "row"
+    moe_hidden_slice = False
+    head_granular = False
+    ssm_state_granular = True
+
+
+@register_family
+class HeadRdpFamily(RdpFamily):
+    """Head-granular attention dropout (plus SSM heads via head_granular).
+
+    ``attn_head_granular`` routes ``attention_block``: the dropped unit is
+    one KV head together with its G = n_heads/n_kv query heads, so the GQA
+    grouping stays contiguous and kept heads execute as compact blocks
+    (wq/wo sliced by query-head group, wk/wv by KV head; output scaled by
+    dp).  ``head_granular`` (the existing SSD capability flag) is set too,
+    so the same plan compacts Mamba2 heads — activating that adaptation
+    for a second family beyond rdp.
+    """
+
+    name = "head_rdp"
+    granularity = "head"
+    moe_hidden_slice = False
+    head_granular = True
+    attn_head_granular = True
+
+
+@register_family
+class ExpertDropFamily(RdpFamily):
+    """Expert dropout: strided keep over the MoE expert axis.
+
+    ``moe_block`` / ``moe_block_ep`` slice the router columns and the
+    expert axis of w_up/w_gate/w_down before routing, so dropped experts
+    are never dispatched.  The router softmax over kept logits equals the
+    mask-to--inf oracle exactly, and the top-k gate renormalization
+    replaces the inverted-dropout scale.  Requires dp | n_experts and
+    top_k <= n_experts/dp (``_moe_pat`` falls back to identity otherwise).
+    """
+
+    name = "expert_drop"
+    granularity = "expert"
+    moe_hidden_slice = False
+    head_granular = False
+    expert_granular = True

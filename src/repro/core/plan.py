@@ -179,11 +179,30 @@ class PatternFamily:
     #: backends this family can execute on ("slice" = the structured XLA
     #: path, "gather" = jnp.take, "pallas" = the compact-DMA kernels)
     backends: tuple = ("slice", "gather")
+    #: dropped-unit granularity ("column" | "row" | "tile" | "head" |
+    #: "expert" | "none") — the DESIGN.md §11 table key; informational,
+    #: dispatch is driven by the capability flags below
+    granularity: str = "row"
+    #: whether jax.grad flows through ``apply_ffn`` on every declared
+    #: backend (slice/gather via XLA autodiff, pallas via the custom-VJP
+    #: kernels in kernels/autodiff.py).  The registry-generic grad sweep in
+    #: tests/test_kernel_grads.py covers exactly the families that set this.
+    differentiable: bool = True
     #: whether MoE expert-hidden slicing applies (rdp-style compaction of
     #: the per-expert hidden dim; families without it run experts dense)
     moe_hidden_slice: bool = False
     #: whether the SSM head-granular adaptation applies (DESIGN.md §4)
     head_granular: bool = False
+    #: whether the SSM *state-row* adaptation applies: strided keep over the
+    #: d_state (N) channels of B/C — exact because the SSD recurrence is
+    #: elementwise in N (DESIGN.md §11)
+    ssm_state_granular: bool = False
+    #: whether whole attention heads are dropped at KV-group granularity
+    #: (one kv head + its GQA query-head group per unit — DESIGN.md §11)
+    attn_head_granular: bool = False
+    #: whether whole MoE experts are dropped (never dispatched; router
+    #: softmax renormalizes over the kept experts — DESIGN.md §11)
+    expert_granular: bool = False
 
     # ---- validation ------------------------------------------------------
     def validate(self, nb: int, dp: int) -> None:
@@ -214,6 +233,24 @@ class PatternFamily:
                    nb: int, act):
         """Mask-multiply reference semantics, or None if not applicable."""
         return None
+
+    # ---- statistical-equivalence contract --------------------------------
+    def kept_units(self, dim: int, dp: int, bias: int,
+                   block: int = 1) -> np.ndarray:
+        """Host-side enumeration of the kept units along the family's
+        canonical dropped axis — the contract ``core.equivalence`` verifies
+        every registered family against (exact + Monte-Carlo per-unit drop
+        marginals, DESIGN.md §11).
+
+        ``dim`` is the axis size in units (FFN neurons, SSM state channels,
+        attention KV groups, MoE experts — whatever the family drops),
+        ``block`` the units-per-pattern-block granularity.  The default is
+        the strided keep every family built on ``_slice_blocks`` shares:
+        block j kept iff ``j % dp == bias``.  2-D families (tdp) expose the
+        tile-column-0 reading — per-column kept sets are shifts of it, so
+        the per-unit marginal law is identical.
+        """
+        return P.np_kept_indices(dim, dp, bias, block)
 
 
 FAMILIES: dict[str, PatternFamily] = {}
@@ -285,6 +322,11 @@ class IdentityFamily(PatternFamily):
 
     name = "identity"
     backends = ("slice", "gather", "pallas")
+    granularity = "none"
+
+    def kept_units(self, dim, dp, bias, block=1):
+        """Identity drops nothing — every unit is kept."""
+        return np.arange(dim)
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
@@ -351,6 +393,7 @@ class TdpFamily(PatternFamily):
 
     name = "tdp"
     backends = ("slice", "pallas")
+    granularity = "tile"
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
@@ -690,6 +733,8 @@ def identity_plan(family: str = "identity", nb: int = 128,
     return DropoutPlan(family=family, dist=(1.0,), nb=nb, block=block)
 
 
-# the column-RDP demo family registers itself on import; importing it here
-# (after the registries exist) makes it available everywhere plan is used
+# the column-RDP demo family and the scenario families (ssm_row, head_rdp,
+# expert_drop) register themselves on import; importing them here (after the
+# registries exist) makes them available everywhere plan is used
 from . import colrdp as _colrdp  # noqa: E402,F401
+from . import families as _families  # noqa: E402,F401

@@ -26,7 +26,7 @@ from pathlib import Path
 import jax
 
 from repro.configs import get_spec, normalize
-from repro.core.plan import build_plan, identity_plan
+from repro.core.plan import FAMILIES, build_plan, identity_plan
 from repro.data.pipeline import SyntheticLMData
 from repro.launch.mesh import make_host_mesh, mesh_from_spec
 from repro.models import init_lm, materialize
@@ -46,7 +46,15 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="target rate p for Approximate Random Dropout")
-    ap.add_argument("--pattern", choices=["rdp", "tdp"], default="rdp")
+    ap.add_argument("--dp-max", type=int, default=8,
+                    help="largest pattern period searched for K — restrict "
+                         "when a sharded mesh rejects large-dp buckets "
+                         "(see DropoutPlan.validate_mesh)")
+    ap.add_argument("--pattern", default="rdp",
+                    choices=sorted(f for f in FAMILIES if f != "identity"),
+                    help="pattern family from the registry (core.plan."
+                         "FAMILIES) — e.g. rdp/tdp, head_rdp, ssm_row, "
+                         "expert_drop")
     ap.add_argument("--backend", choices=["slice", "gather", "pallas"],
                     default="slice",
                     help="pattern execution backend (pallas = compact "
@@ -69,9 +77,12 @@ def main(argv=None):
 
     if args.dropout > 0:
         # dp must divide the pattern-block count (the Trainer re-pins nb to
-        # the model's cfg.pattern_nb)
+        # the model's cfg.pattern_nb; _attn/_ssm/_moe_pat re-pin per site).
+        # block only feeds the equivalence oracle — pure-SSM archs have
+        # d_ff == 0, so clamp to 1 there.
         plan = build_plan(args.pattern, args.dropout, nb=cfg.pattern_nb,
-                          dp_max=8, block=cfg.d_ff // cfg.pattern_nb,
+                          dp_max=args.dp_max,
+                          block=max(1, cfg.d_ff // cfg.pattern_nb),
                           backend=args.backend, seed=args.seed)
     else:
         plan = identity_plan()

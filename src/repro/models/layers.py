@@ -243,14 +243,43 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
 def attention_block(params, x, *, n_heads: int, n_kv: int, head_dim: int,
                     rope_theta: float = 1e4, causal: bool = True,
                     window: Optional[int] = None, chunk: int = 1024,
-                    positions: Optional[jax.Array] = None) -> jax.Array:
-    """Full attention sub-layer on [B, S, d_model] (training/prefill path)."""
+                    positions: Optional[jax.Array] = None,
+                    pat=NO_PATTERN, layer: int = 0) -> jax.Array:
+    """Full attention sub-layer on [B, S, d_model] (training/prefill path).
+
+    Approximate dropout applies at KV-group granularity for families
+    declaring ``attn_head_granular`` (head_rdp): one dropped unit is one KV
+    head together with its G = n_heads/n_kv query-head group, so GQA
+    grouping stays contiguous and the kept heads run as compact blocks
+    through the unchanged blockwise attention (``nb`` must equal ``n_kv``
+    — ``_attn_pat`` in models/transformer.py enforces this).  Kept-head
+    output is scaled by dp (inverted dropout); a dropped head's output —
+    including its wo contribution — is exactly zero in the mask oracle.
+    """
     B, S, _ = x.shape
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
-    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
-    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
-    if "bq" in params:
-        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    bp = plan_mod.as_bound(pat).for_layer(layer)
+    dp = bp.dp if (bp.active and
+                   plan_mod.get_family(bp.family).attn_head_granular) else 1
+    wq, wk, wv, wo = params["wq"], params["wk"], params["wv"], params["wo"]
+    bq, bk, bv = params.get("bq"), params.get("bk"), params.get("bv")
+    if dp > 1:
+        b = bp.bias
+        assert n_kv % dp == 0 and bp.nb == n_kv, (n_kv, dp, bp.nb)
+        wq = _slice_blocks(wq, 1, n_kv, dp, b)   # blk = G query heads
+        wk = _slice_blocks(wk, 1, n_kv, dp, b)
+        wv = _slice_blocks(wv, 1, n_kv, dp, b)
+        wo = _slice_blocks(wo, 0, n_kv, dp, b)
+        if bq is not None:
+            bq = _slice_blocks(bq, 0, n_kv, dp, b)
+            bk = _slice_blocks(bk, 0, n_kv, dp, b)
+            bv = _slice_blocks(bv, 0, n_kv, dp, b)
+        n_heads //= dp
+        n_kv //= dp
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    if bq is not None:
+        q, k, v = q + bq, k + bk, v + bv
     if positions is None:
         positions = jnp.arange(S)[None, :].repeat(B, 0)
     cos, sin = rope_cache(positions, head_dim, rope_theta)
@@ -266,7 +295,9 @@ def attention_block(params, x, *, n_heads: int, n_kv: int, head_dim: int,
     k = constrain(k, ("batch", "kv_seq", "kv_heads", "head_dim"))
     v = constrain(v, ("batch", "kv_seq", "kv_heads", "head_dim"))
     o = blockwise_attention(q, k, v, causal=causal, window=window, chunk=chunk)
-    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    out = jnp.einsum("bshk,hkd->bsd", o, wo)
+    if dp > 1:
+        out = out * dp  # inverted-dropout scale on kept heads
     # head-sharded partial sums reduce-scatter straight into the seq-sharded
     # residual stream under SP (vs all-reduce to replicated)
     return constrain(out, ("batch", "res_seq", "embed"))
@@ -338,19 +369,37 @@ def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
 
     Dispatch via scatter-add into [E, C, d] buffers (no [T,E,C] one-hot);
     under `ep_full` rules the buffers shard over experts and XLA inserts the
-    all-to-all.  Approximate dropout applies *within* experts (same dp, bias
-    offset by expert index — DESIGN.md §4); only families declaring
-    ``moe_hidden_slice`` (rdp) compact the expert hidden dim — others run
-    experts dense.  Returns (y, aux_loss).
+    all-to-all.  Approximate dropout composes two ways (DESIGN.md §4, §11):
+    families declaring ``moe_hidden_slice`` (rdp) compact *within* experts
+    (hidden dim, same dp every expert); families declaring
+    ``expert_granular`` (expert_drop) slice the expert axis itself — router
+    columns and w_up/w_gate/w_down expert slices of dropped experts are
+    removed before routing, so dropped experts are never dispatched.  The
+    router softmax then renormalizes over kept experts (== the
+    mask-logits-to--inf oracle), so no inverted-dropout scale applies.
+    Other families run experts dense.  Returns (y, aux_loss).
     """
     B, S, d = x.shape
     E = params["router"].shape[-1]
+    bp = plan_mod.as_bound(pat).for_layer(layer)
+    fam = plan_mod.get_family(bp.family)
+    router = params["router"]
+    w_up, w_gate, w_down = params["w_up"], params["w_gate"], params["w_down"]
+    expert_pat = (bp.active and fam.expert_granular
+                  and E % bp.dp == 0 and top_k <= E // bp.dp)
+    if expert_pat:
+        eb = bp.bias
+        router = _slice_blocks(router, 1, E, bp.dp, eb)
+        w_up = _slice_blocks(w_up, 0, E, bp.dp, eb)
+        w_gate = _slice_blocks(w_gate, 0, E, bp.dp, eb)
+        w_down = _slice_blocks(w_down, 0, E, bp.dp, eb)
+        E //= bp.dp
     T = B * S
     C = int(math.ceil(T * top_k / E * capacity_factor))
     C = max(8, -(-C // 8) * 8)  # round up to 8 for sublane alignment
 
     xt = x.reshape(T, d)
-    logits = (xt.astype(jnp.float32) @ params["router"])
+    logits = (xt.astype(jnp.float32) @ router)
     probs = jax.nn.softmax(logits, -1)
     gate_vals, topk_idx = jax.lax.top_k(probs, top_k)        # [T, k]
     gate_vals = gate_vals / jnp.maximum(
@@ -377,10 +426,7 @@ def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
     buf = constrain(buf[:, :C], ("experts", None, "embed"))
 
     # per-expert FFN (batched over experts; within-expert approx dropout)
-    bp = plan_mod.as_bound(pat).for_layer(layer)
-    dp = bp.dp if (bp.active
-                   and plan_mod.get_family(bp.family).moe_hidden_slice) else 1
-    w_up, w_gate, w_down = params["w_up"], params["w_gate"], params["w_down"]
+    dp = bp.dp if (bp.active and fam.moe_hidden_slice) else 1
     if dp > 1:
         b = bp.bias
         w_up = _slice_blocks(w_up, 2, bp.nb, dp, b)
@@ -406,7 +452,9 @@ def moe_block(params, x, *, top_k: int, capacity_factor: float = 1.25,
 
     y = y.reshape(B, S, d)
     if "shared" in params:
-        y = y + ffn_block(params["shared"], x, pat, layer=layer, act=act)
+        # expert_drop targets routed experts; shared experts always run
+        sp = NO_PATTERN if fam.expert_granular else pat
+        y = y + ffn_block(params["shared"], x, sp, layer=layer, act=act)
     return constrain(y, ("batch", "res_seq", "embed")), aux
 
 
@@ -432,11 +480,31 @@ def moe_block_ep(params, x, *, top_k: int, n_experts: int,
 
     mesh, rules = current_mesh(), current_rules()
     E = n_experts
+    # fallback captures the ORIGINAL params/pat — moe_block applies its own
+    # expert/hidden slicing, so nothing is sliced twice
     fallback = functools.partial(
         moe_block, params, x, top_k=top_k, capacity_factor=capacity_factor,
         pat=pat, layer=layer, act=act)
     if mesh is None or rules is None:
         return fallback()
+
+    # expert dropout: slice the expert axis up front so dropped experts are
+    # never dispatched — smaller buffers, fewer all_to_all bytes, and the EP
+    # divisibility below is computed over the KEPT expert count
+    bp = plan_mod.as_bound(pat).for_layer(layer)
+    fam = plan_mod.get_family(bp.family)
+    router = params["router"]
+    w_up_p, w_gate_p = params["w_up"], params["w_gate"]
+    w_down_p = params["w_down"]
+    if (bp.active and fam.expert_granular
+            and E % bp.dp == 0 and top_k <= E // bp.dp):
+        eb = bp.bias
+        router = _slice_blocks(router, 1, E, bp.dp, eb)
+        w_up_p = _slice_blocks(w_up_p, 0, E, bp.dp, eb)
+        w_gate_p = _slice_blocks(w_gate_p, 0, E, bp.dp, eb)
+        w_down_p = _slice_blocks(w_down_p, 0, E, bp.dp, eb)
+        E //= bp.dp
+
     spec = rules.lookup("experts", is_param=True)
     ep_axes = tuple(a for a in ((spec,) if isinstance(spec, str) else
                                 (spec or ())) if a in mesh.axis_names)
@@ -458,9 +526,7 @@ def moe_block_ep(params, x, *, top_k: int, n_experts: int,
     E_loc = E // n_ep
 
     # within-expert approximate dropout (same dp for every expert)
-    bp = plan_mod.as_bound(pat).for_layer(layer)
-    dp = bp.dp if (bp.active
-                   and plan_mod.get_family(bp.family).moe_hidden_slice) else 1
+    dp = bp.dp if (bp.active and fam.moe_hidden_slice) else 1
     b_pat = bp.bias if dp > 1 else 0
 
     def mapped(xl, router, w_up, w_gate, w_down):
@@ -532,11 +598,12 @@ def moe_block_ep(params, x, *, top_k: int, n_experts: int,
         in_specs=(xspec, PSpec(), ep_spec, ep_spec, ep_spec),
         out_specs=(xspec, PSpec()),
         **_SHARD_MAP_NOCHECK,
-    )(x, params["router"], params["w_up"], params["w_gate"],
-      params["w_down"])
+    )(x, router, w_up_p, w_gate_p, w_down_p)
 
     if "shared" in params:
-        y = y + ffn_block(params["shared"], x, pat, layer=layer, act=act)
+        # expert_drop targets routed experts; shared experts always run
+        sp = NO_PATTERN if fam.expert_granular else pat
+        y = y + ffn_block(params["shared"], x, sp, layer=layer, act=act)
     return constrain(y, ("batch", "res_seq", "embed")), aux
 
 
@@ -583,10 +650,18 @@ def mamba2_block(params, x, *, d_state: int, headdim: int = 64,
                  pat=NO_PATTERN, layer: int = 0):
     """SSD mixer on [B, L, d_model] (training/prefill path).
 
-    Approximate dropout applies to the in/out projections' expanded
-    channels (head-granular so the recurrence stays well-formed): kept
-    heads are computed, dropped heads contribute zero — DESIGN.md §4.
-    Only families declaring ``head_granular`` (rdp) participate.
+    Approximate dropout participates at two granularities, selected by the
+    plan family's capability flags (DESIGN.md §4, §11):
+
+    * ``head_granular`` (rdp, head_rdp) — whole SSD heads: kept heads are
+      computed, dropped heads contribute zero; in/out projections, conv,
+      A/D/dt and norm_scale all slice by head-block.
+    * ``ssm_state_granular`` (ssm_row) — rows of the recurrent *state*:
+      the d_state channels of B and C.  The SSD recurrence is elementwise
+      in the state index, so keeping 1/dp of the B/C columns (in_proj and
+      conv) computes exactly the masked recurrence at 1/dp the state FLOPs.
+      Only the SSD output is ×dp-scaled — the D·x skip never touches the
+      state and stays unscaled.
     """
     B, L, _ = x.shape
     d_inner = expand * x.shape[-1]
@@ -594,12 +669,34 @@ def mamba2_block(params, x, *, d_state: int, headdim: int = 64,
 
     # --- projections (RDP over heads: slice head-blocks of in/out proj) ---
     bp = plan_mod.as_bound(pat).for_layer(layer)
-    dp = bp.dp if (bp.active
-                   and plan_mod.get_family(bp.family).head_granular) else 1
+    fam = plan_mod.get_family(bp.family)
+    dp = bp.dp if (bp.active and fam.head_granular) else 1
+    state_dp = bp.dp if (bp.active and dp == 1
+                         and fam.ssm_state_granular
+                         and d_state % bp.dp == 0) else 1
     in_proj, out_proj = params["in_proj"], params["out_proj"]
     conv_w, conv_b = params["conv_w"], params["conv_b"]
     A_log, D, dt_bias = params["A_log"], params["D"], params["dt_bias"]
     nh = n_heads
+    if state_dp > 1:
+        # row dropout over the state dim: slice the B and C column ranges
+        # of in_proj (z | x | B | C | dt layout) and the matching conv
+        # channels ((x, B, C) layout); everything head-shaped stays dense
+        b = bp.bias % state_dp
+        kept_n = jnp.arange(d_state // state_dp) * state_dp + b
+        zx = in_proj[:, :2 * d_inner]
+        bc_lo = 2 * d_inner
+        bcol = _slice_blocks(in_proj[:, bc_lo:bc_lo + d_state],
+                             1, d_state, state_dp, b)
+        ccol = _slice_blocks(in_proj[:, bc_lo + d_state:bc_lo + 2 * d_state],
+                             1, d_state, state_dp, b)
+        dtc = in_proj[:, bc_lo + 2 * d_state:]
+        in_proj = jnp.concatenate([zx, bcol, ccol, dtc], 1)
+        conv_keep = jnp.concatenate(
+            [jnp.arange(d_inner), d_inner + kept_n,
+             d_inner + d_state + kept_n])
+        conv_w, conv_b = conv_w[:, conv_keep], conv_b[conv_keep]
+        d_state //= state_dp
     if dp > 1:
         b = bp.bias
         assert n_heads % dp == 0, (n_heads, dp)
@@ -636,6 +733,10 @@ def mamba2_block(params, x, *, d_state: int, headdim: int = 64,
     A = -jnp.exp(A_log)                                       # [H]
     xh = xs.reshape(B, L, nh, headdim)
     y = _ssd_chunked(xh, dt, A, Bc, Cc, chunk)                # [B, L, H, P]
+    if state_dp > 1:
+        # inverted-dropout scale on the state sum only: the D·x skip below
+        # bypasses the recurrence and must stay unscaled
+        y = y * state_dp
     y = y + D[None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(B, L, d_inner)
     if dp > 1:

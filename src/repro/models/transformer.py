@@ -278,7 +278,8 @@ def _run_dense(cfg, lp, x, pat, layer_idx, window):
         a = L.attention_block(lp["attn"], h, n_heads=cfg.n_heads,
                               n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
                               rope_theta=cfg.rope_theta, window=window,
-                              chunk=cfg.attn_chunk)
+                              chunk=cfg.attn_chunk,
+                              pat=_attn_pat(cfg, pat), layer=layer_idx)
     x = x + a
     h = L.rms_norm(lp["norm2"], x, cfg.norm_eps)
     f = L.ffn_block(lp["ffn"], h, _ffn_pat(cfg, pat), layer=layer_idx)
@@ -295,7 +296,8 @@ def _run_moe(cfg, lp, x, pat, layer_idx, window):
         a = L.attention_block(lp["attn"], h, n_heads=cfg.n_heads,
                               n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
                               rope_theta=cfg.rope_theta, window=window,
-                              chunk=cfg.attn_chunk)
+                              chunk=cfg.attn_chunk,
+                              pat=_attn_pat(cfg, pat), layer=layer_idx)
     x = x + a
     h = L.rms_norm(lp["norm2"], x, cfg.norm_eps)
     if cfg.moe_impl == "ep_shardmap":
@@ -325,7 +327,8 @@ def _run_shared_attn(cfg, sp, x, x0, pat, layer_idx):
     a = L.attention_block(sp["attn"], h2, n_heads=cfg.n_heads,
                           n_kv=cfg.n_kv_heads, head_dim=2 * cfg.d_model // cfg.n_heads,
                           rope_theta=cfg.rope_theta, window=None,
-                          chunk=cfg.attn_chunk)
+                          chunk=cfg.attn_chunk,
+                          pat=_attn_pat(cfg, pat), layer=layer_idx)
     x = x + a
     h = L.rms_norm(sp["norm2"], x, cfg.norm_eps)
     f = L.ffn_block(sp["ffn"], h, _ffn_pat(cfg, pat), layer=layer_idx)
@@ -338,21 +341,50 @@ def _ffn_pat(cfg, pat) -> plan_mod.BoundPlan:
 
 
 def _moe_pat(cfg, pat) -> plan_mod.BoundPlan:
-    # experts have their own (smaller) hidden dim; reuse nb if it divides
     bp = plan_mod.as_bound(pat)
+    if not bp.active:
+        return bp
+    fam = plan_mod.get_family(bp.family)
+    if fam.expert_granular:
+        # expert-granular: nb = the expert count; need dp | E and enough
+        # kept experts to satisfy top-k, else the layer runs dense
+        if (cfg.n_experts % bp.dp == 0
+                and cfg.top_k <= cfg.n_experts // bp.dp):
+            return dataclasses.replace(bp, nb=cfg.n_experts)
+        return plan_mod.IDENTITY
+    # hidden-granular: experts have their own (smaller) hidden dim; reuse
+    # nb if it divides
     nb = cfg.pattern_nb
     while cfg.moe_d_ff % nb != 0:
         nb //= 2
-    return dataclasses.replace(bp, nb=nb) if bp.active else bp
+    return dataclasses.replace(bp, nb=nb)
 
 
 def _ssm_pat(cfg, pat) -> plan_mod.BoundPlan:
-    # head-granular for SSD; nb = n_heads (dp must divide head count);
-    # families without the head-granular adaptation run the SSM dense
+    # head-granular for SSD (nb = n_heads, dp must divide the head count);
+    # state-row-granular for ssm_row (nb = d_state, dp must divide it);
+    # families with neither adaptation run the SSM dense
     bp = plan_mod.as_bound(pat)
-    if (bp.active and plan_mod.get_family(bp.family).head_granular
-            and cfg.ssm_heads % bp.dp == 0):
+    if not bp.active:
+        return bp
+    fam = plan_mod.get_family(bp.family)
+    if fam.head_granular and cfg.ssm_heads % bp.dp == 0:
         return dataclasses.replace(bp, nb=cfg.ssm_heads)
+    if fam.ssm_state_granular and cfg.ssm_state % bp.dp == 0:
+        return dataclasses.replace(bp, nb=cfg.ssm_state)
+    return plan_mod.IDENTITY
+
+
+def _attn_pat(cfg, pat) -> plan_mod.BoundPlan:
+    # KV-group-granular attention dropout: nb = n_kv_heads so one dropped
+    # unit is one KV head plus its GQA query-head group (contiguous in the
+    # group-major head layout); families without attn_head_granular — and
+    # MLA blocks, which have no per-head KV projections to slice — run the
+    # attention dense
+    bp = plan_mod.as_bound(pat)
+    if (bp.active and plan_mod.get_family(bp.family).attn_head_granular
+            and cfg.n_kv_heads % bp.dp == 0):
+        return dataclasses.replace(bp, nb=cfg.n_kv_heads)
     return plan_mod.IDENTITY
 
 

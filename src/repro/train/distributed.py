@@ -165,6 +165,37 @@ class TrainerConfig:
 
 
 # --------------------------------------------------------------------------
+# Plan × mesh composition
+# --------------------------------------------------------------------------
+
+def plan_dims(plan: DropoutPlan, cfg: ModelConfig) -> dict:
+    """The logical axes a plan's family compacts, mapped to their FULL
+    sizes — the ``dims`` argument of ``DropoutPlan.validate_mesh``.
+
+    Family-aware: every family compacts the FFN hidden dim (``ffn_kept``);
+    ``attn_head_granular`` families additionally shrink the query/KV head
+    axes, ``expert_granular`` the expert axis, ``ssm_state_granular`` /
+    ``head_granular`` the SSM inner dim.  Dims the model does not have
+    (d_ff=0 for pure-SSM configs, n_experts=0 for dense) are omitted.
+    """
+    fam = plan_mod.get_family(plan.family)
+    dims: dict = {}
+    if cfg.d_ff:
+        dims["ffn_kept"] = cfg.d_ff
+    if fam.attn_head_granular and cfg.n_heads and not cfg.mla:
+        dims["heads"] = cfg.n_heads
+        dims["kv_heads"] = cfg.n_kv_heads
+    if fam.expert_granular and getattr(cfg, "n_experts", 0):
+        dims["experts"] = cfg.n_experts
+    # head-granular SSD shrinks the d_inner-sized out_proj/norm axes;
+    # ssm_row shrinks only the (unsharded, d_state-sized) B/C channels, so
+    # it adds no extra mesh constraint
+    if fam.head_granular and getattr(cfg, "ssm_state", 0):
+        dims["inner"] = cfg.d_inner
+    return dims
+
+
+# --------------------------------------------------------------------------
 # The trainer
 # --------------------------------------------------------------------------
 
@@ -208,10 +239,11 @@ class DistributedTrainer:
             raise ValueError(
                 f"pattern backend {self.plan.backend!r} is not "
                 f"differentiable and cannot be used for training")
-        # every bucket's kept FFN dim must divide the mesh axes its rule
-        # names — fail at construction, not silently mid-partitioning
+        # every bucket's kept dim must divide the mesh axes its rule names
+        # — fail at construction, not silently mid-partitioning.  Which
+        # dims a plan compacts depends on its family's granularity flags.
         self.plan.validate_mesh(self.mesh, self.rules,
-                                dims={"ffn_kept": cfg.d_ff})
+                                dims=plan_dims(self.plan, cfg))
         # NOTE: default must be constructed per instance — a dataclass
         # default in the signature would be one shared mutable config
         self.tcfg = tcfg if tcfg is not None else TrainerConfig()

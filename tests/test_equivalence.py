@@ -1,22 +1,33 @@
-"""Statistical equivalence (paper Eq. 2-3): per-unit marginal == global rate."""
+"""Statistical equivalence (paper Eq. 2-3): per-unit marginal == global rate.
+
+Monte-Carlo tolerances here are derived from the step count via
+``mc_tolerance`` (a binomial confidence bound), not fixed constants — and
+every schedule pins its seed, so the draws are reproducible and the
+assertions cannot flake as new families join the sweep.
+"""
 import numpy as np
 import pytest
 
 from repro.core.equivalence import (check_equivalence,
                                     empirical_unit_drop_marginals,
-                                    exact_unit_drop_marginals)
+                                    exact_unit_drop_marginals, mc_tolerance)
 from repro.core.sampler import PatternSchedule, build_schedule
 
 
 @pytest.mark.parametrize("p", [0.3, 0.5, 0.7])
 def test_full_equivalence_report(p):
-    sched = build_schedule("rdp", p, n_units_blocks=8, dp_max=8, block=16)
+    sched = build_schedule("rdp", p, n_units_blocks=8, dp_max=8, block=16,
+                           seed=0)
     report = check_equivalence(sched, dim=8 * 16, target=p, steps=3000)
     assert report["uniform"]
     # the entropy term (λ2=0.15) trades ≤2% rate error for sub-model
     # diversity — the paper's E_p vs E_n balance (Alg. 1 line 7)
     assert report["rate_err"] < 0.025
-    assert report["mc_max_err"] < 0.03
+    # check_equivalence already asserted the binomial-CI bound; the report
+    # must carry the bound it used so sweep callers can audit it
+    assert report["mc_max_err"] < report["mc_tol"]
+    assert report["mc_tol"] == pytest.approx(
+        mc_tolerance(report["global_rate"], 3000))
 
 
 def test_exact_marginal_uniform_and_correct():
@@ -43,7 +54,8 @@ def test_empirical_matches_exact():
     sched = PatternSchedule("rdp", dist, block=2, seed=3)
     exact = exact_unit_drop_marginals(dist, dim=16, block=2)
     emp = empirical_unit_drop_marginals(sched, dim=16, steps=8000)
-    np.testing.assert_allclose(emp, exact, atol=0.02)
+    np.testing.assert_allclose(emp, exact,
+                               atol=mc_tolerance(float(exact[0]), 8000))
 
 
 def test_expected_flop_fraction():

@@ -1,0 +1,355 @@
+"""Registry-wide family sweep: every registered pattern family, zero
+per-family test code.
+
+The tentpole contract (ISSUE 6): a family added via ``@register_family``
+is covered here automatically —
+
+1. **Statistical equivalence** (paper Eq. 2-3), granularity-generic: the
+   exact per-unit drop marginal (through the family's ``kept_units``
+   enumeration) is uniform and equals p_g, and the Monte-Carlo marginal
+   from the real sampler agrees within a binomial-CI tolerance.
+2. **kept_units contract**: for every (dp, bias) the family's kept sets
+   partition the unit axis across biases and have exactly 1/dp coverage —
+   the combinatorial fact the equivalence claim rests on.
+3. **Model-level oracles** for the scenario granularities: head_rdp
+   attention vs a masked-head dense reference, ssm_row Mamba2 vs a
+   masked-state-channel dense reference, expert_drop MoE vs the
+   pre-sliced-experts dense reference plus the softmax-renormalization
+   identity, with exactly-zero grads on every dropped head / state
+   channel / expert.
+4. **Plan × mesh composition**: each family's plan validates under
+   ``validate_mesh`` with its family-aware dims on the ambient device
+   mesh (CI re-runs this file under XLA_FLAGS-forced 8 devices).
+
+Run under forced multi-device:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      pytest tests/test_family_sweep.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+from repro.core import patterns as P
+from repro.core.equivalence import check_equivalence
+from repro.core.plan import (FAMILIES, BoundPlan, build_plan, get_family,
+                             identity_plan)
+
+jax.config.update("jax_enable_x64", False)
+
+ALL_FAMILIES = sorted(FAMILIES)
+ACTIVE_FAMILIES = [f for f in ALL_FAMILIES if f != "identity"]
+
+
+def _rand(key, shape, scale=0.2):
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def _rand_params(params, seed=0, scale=0.2):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(params))
+    return {k: _rand(ks[i], v.shape, scale)
+            for i, (k, v) in enumerate(sorted(params.items()))}
+
+
+# --------------------------------------------------------------------------
+# 1. statistical equivalence, every family, generic oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ACTIVE_FAMILIES)
+@pytest.mark.parametrize("target", [0.3, 0.5])
+def test_family_statistical_equivalence(family, target):
+    plan = build_plan(family, target, nb=16, block=4, seed=0)
+    report = check_equivalence(plan, dim=64, target=target, steps=2000)
+    assert report["family"] == family
+    assert report["uniform"]
+    assert report["rate_err"] < 0.025
+    assert report["mc_max_err"] < report["mc_tol"]
+
+
+def test_identity_family_never_drops():
+    report = check_equivalence(identity_plan(nb=16, block=4), dim=64,
+                               target=0.0, steps=200)
+    assert report["global_rate"] == 0.0 and report["mc_max_err"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# 2. kept_units contract: 1/dp coverage, partition across biases
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+@pytest.mark.parametrize("dp", [1, 2, 4])
+def test_kept_units_partition_across_biases(family, dp):
+    fam = get_family(family)
+    dim, block = 64, 4
+    seen = np.zeros(dim, np.int64)
+    for b in range(dp):
+        kept = np.asarray(fam.kept_units(dim, dp, b, block))
+        assert kept.ndim == 1 and len(set(kept.tolist())) == kept.size
+        if family != "identity":
+            assert kept.size == dim // dp, (family, dp, b, kept.size)
+        seen[kept] += 1
+    if family == "identity":
+        assert np.all(seen == dp)          # identity keeps everything
+    else:
+        # every unit kept under exactly one bias — the partition that makes
+        # the uniform-marginal claim hold
+        assert np.all(seen == 1), (family, dp)
+
+
+# --------------------------------------------------------------------------
+# 3. model-level oracles for the scenario granularities
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dp,bias", [(2, 0), (2, 1), (4, 3)])
+def test_head_rdp_attention_matches_masked_oracle(dp, bias):
+    """Compact KV-group slicing == dense attention with dropped groups'
+    v zeroed, output ×dp — exact, not approximate."""
+    d, H, KH, hd, B, S = 32, 8, 4, 8, 2, 16
+    if KH % dp:
+        pytest.skip("dp must divide n_kv")
+    params, _ = L.init_attention(d, H, KH, hd, qkv_bias=True,
+                                 dtype=jnp.float32)
+    params = _rand_params(params, seed=dp * 7 + bias)
+    x = _rand(jax.random.PRNGKey(99), (B, S, d))
+    bp = BoundPlan(family="head_rdp", dp=dp, bias=bias, nb=KH,
+                   bias_policy="fixed")
+    got = L.attention_block(params, x, n_heads=H, n_kv=KH, head_dim=hd,
+                            pat=bp)
+    kept_kv = P.np_kept_indices(KH, dp, bias)
+    mask = np.zeros((KH, 1), np.float32)
+    mask[kept_kv] = 1.0
+    op = dict(params)
+    op["wv"] = params["wv"] * mask[None]
+    op["bv"] = params["bv"] * mask
+    want = L.attention_block(op, x, n_heads=H, n_kv=KH, head_dim=hd) * dp
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_head_rdp_dropped_head_grads_exactly_zero():
+    d, H, KH, hd, dp, bias = 32, 8, 4, 8, 2, 1
+    params, _ = L.init_attention(d, H, KH, hd, qkv_bias=True,
+                                 dtype=jnp.float32)
+    params = _rand_params(params, seed=5)
+    x = _rand(jax.random.PRNGKey(1), (2, 16, d))
+    bp = BoundPlan(family="head_rdp", dp=dp, bias=bias, nb=KH,
+                   bias_policy="fixed")
+
+    def loss(p):
+        return (L.attention_block(p, x, n_heads=H, n_kv=KH, head_dim=hd,
+                                  pat=bp) ** 2).mean()
+
+    g = jax.grad(loss)(params)
+    kept_kv = set(P.np_kept_indices(KH, dp, bias).tolist())
+    G = H // KH
+    for kv in range(KH):
+        qh = slice(kv * G, (kv + 1) * G)
+        gq = np.asarray(g["wq"])[:, qh]
+        gk = np.asarray(g["wk"])[:, kv]
+        go = np.asarray(g["wo"])[qh]
+        if kv in kept_kv:
+            assert np.any(gq != 0.0) and np.any(gk != 0.0) \
+                and np.any(go != 0.0), f"kept kv group {kv} all-zero"
+        else:
+            assert np.all(gq == 0.0) and np.all(gk == 0.0) \
+                and np.all(go == 0.0), f"dropped kv group {kv} nonzero grad"
+
+
+@pytest.mark.parametrize("dp,bias", [(2, 0), (2, 1), (4, 2)])
+def test_ssm_row_mamba2_matches_masked_oracle(dp, bias):
+    """Compact state-channel slicing == dense SSD with dropped B/C channels
+    masked post-conv, state sum ×dp, D-skip unscaled."""
+    dm, dstate, hdim, exp, B, S = 32, 16, 16, 2, 2, 16
+    params, _ = L.init_mamba2(dm, dstate, headdim=hdim, expand=exp,
+                              dtype=jnp.float32)
+    params = _rand_params(params, seed=dp + bias)
+    x = _rand(jax.random.PRNGKey(3), (B, S, dm))
+    bp = BoundPlan(family="ssm_row", dp=dp, bias=bias, nb=dstate,
+                   bias_policy="fixed")
+    got = L.mamba2_block(params, x, d_state=dstate, headdim=hdim,
+                         expand=exp, pat=bp)
+
+    # dense reference with explicit state-channel masking
+    d_inner = exp * dm
+    nh = d_inner // hdim
+    proj = x @ params["in_proj"]
+    z, xs, Bc, Cc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + dstate,
+               2 * d_inner + 2 * dstate], -1)
+    xbc = jnp.concatenate([xs, Bc, Cc], -1)
+    xbc = jax.nn.silu(L._causal_conv1d(xbc, params["conv_w"],
+                                       params["conv_b"], 4))
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + dstate], -1)
+    mask = np.zeros(dstate, np.float32)
+    mask[P.np_kept_indices(dstate, dp, bias)] = 1.0
+    Bc, Cc = Bc * mask, Cc * mask
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    xh = xs.reshape(B, S, nh, hdim)
+    y = L._ssd_chunked(xh, dt, -jnp.exp(params["A_log"]), Bc, Cc, 256) * dp
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-6)
+    want = (y * params["norm_scale"]).astype(x.dtype) @ params["out_proj"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ssm_row_dropped_state_channel_grads_exactly_zero():
+    dm, dstate, hdim, exp, dp, bias = 32, 16, 16, 2, 2, 1
+    params, _ = L.init_mamba2(dm, dstate, headdim=hdim, expand=exp,
+                              dtype=jnp.float32)
+    params = _rand_params(params, seed=11)
+    x = _rand(jax.random.PRNGKey(4), (2, 16, dm))
+    bp = BoundPlan(family="ssm_row", dp=dp, bias=bias, nb=dstate,
+                   bias_policy="fixed")
+
+    def loss(p):
+        return (L.mamba2_block(p, x, d_state=dstate, headdim=hdim,
+                               expand=exp, pat=bp) ** 2).mean()
+
+    g = jax.grad(loss)(params)
+    d_inner = exp * dm
+    kept = set(P.np_kept_indices(dstate, dp, bias).tolist())
+    gin = np.asarray(g["in_proj"])
+    gcw = np.asarray(g["conv_w"])
+    for n in range(dstate):
+        cols = (2 * d_inner + n, 2 * d_inner + dstate + n)   # B_n, C_n
+        conv_ch = (d_inner + n, d_inner + dstate + n)
+        if n in kept:
+            assert all(np.any(gin[:, c] != 0.0) for c in cols), \
+                f"kept state channel {n} all-zero"
+        else:
+            assert all(np.all(gin[:, c] == 0.0) for c in cols), \
+                f"dropped state channel {n} nonzero in_proj grad"
+            assert all(np.all(gcw[:, c] == 0.0) for c in conv_ch), \
+                f"dropped state channel {n} nonzero conv grad"
+
+
+@pytest.mark.parametrize("dp,bias", [(2, 0), (2, 1), (4, 1)])
+def test_expert_drop_moe_matches_presliced_oracle(dp, bias):
+    """Expert slicing before routing == running the dense MoE over the
+    kept experts only (gate renormalization, no ×dp scale) — exact."""
+    dm, E, topk, dff, B, S = 32, 8, 2, 16, 2, 16
+    if topk > E // dp:
+        pytest.skip("not enough kept experts for top-k")
+    params, _ = L.init_moe(dm, dff, E, dtype=jnp.float32)
+    params = _rand_params(params, seed=dp * 3 + bias)
+    x = _rand(jax.random.PRNGKey(6), (B, S, dm))
+    bp = BoundPlan(family="expert_drop", dp=dp, bias=bias, nb=E,
+                   bias_policy="fixed")
+    got, aux = L.moe_block(params, x, top_k=topk, capacity_factor=8.0,
+                           pat=bp)
+    kept = P.np_kept_indices(E, dp, bias)
+    sliced = {"router": params["router"][:, kept],
+              "w_up": params["w_up"][kept],
+              "w_gate": params["w_gate"][kept],
+              "w_down": params["w_down"][kept]}
+    want, aux_ref = L.moe_block(sliced, x, top_k=topk, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-6)
+
+
+def test_expert_drop_renormalized_softmax_equals_neginf_mask():
+    """The routing identity expert_drop relies on: softmax over kept
+    logits == softmax with dropped logits at -inf, restricted to kept."""
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(64, 8)).astype(np.float64)
+    kept = P.np_kept_indices(8, 2, 1)
+    masked = np.where(np.isin(np.arange(8), kept), logits, -np.inf)
+    full = np.exp(masked - masked.max(-1, keepdims=True))
+    full = full / full.sum(-1, keepdims=True)
+    compact = np.exp(logits[:, kept] - logits[:, kept].max(-1, keepdims=True))
+    compact = compact / compact.sum(-1, keepdims=True)
+    np.testing.assert_allclose(full[:, kept], compact, atol=1e-12)
+
+
+def test_expert_drop_dropped_expert_grads_exactly_zero():
+    dm, E, topk, dff, dp, bias = 32, 8, 2, 16, 2, 0
+    params, _ = L.init_moe(dm, dff, E, dtype=jnp.float32)
+    params = _rand_params(params, seed=21)
+    x = _rand(jax.random.PRNGKey(8), (2, 16, dm))
+    bp = BoundPlan(family="expert_drop", dp=dp, bias=bias, nb=E,
+                   bias_policy="fixed")
+
+    def loss(p):
+        y, aux = L.moe_block(p, x, top_k=topk, capacity_factor=8.0, pat=bp)
+        return (y ** 2).mean() + 0.01 * aux
+
+    g = jax.grad(loss)(params)
+    kept = set(P.np_kept_indices(E, dp, bias).tolist())
+    for e in range(E):
+        ge = [np.asarray(g[k])[e] for k in ("w_up", "w_gate", "w_down")]
+        gr = np.asarray(g["router"])[:, e]
+        if e in kept:
+            assert any(np.any(x != 0.0) for x in ge), f"kept expert {e}"
+        else:
+            assert all(np.all(x == 0.0) for x in ge), \
+                f"dropped expert {e} nonzero weight grad"
+            assert np.all(gr == 0.0), f"dropped expert {e} nonzero router"
+
+
+# --------------------------------------------------------------------------
+# 3b. the families route end-to-end through the transformer forward
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,arch", [
+    ("head_rdp", "qwen2_1_5b"),
+    ("ssm_row", "mamba2_1_3b"),
+    ("expert_drop", "qwen3_moe_30b_a3b"),
+    ("rdp", "qwen2_1_5b"),
+])
+def test_family_lm_loss_finite_and_pattern_sensitive(family, arch):
+    """lm_loss runs for every scenario family on its scenario config and
+    actually depends on the pattern (dp=2 output != dense output)."""
+    from repro.configs import get_smoke
+    from repro.models import init_lm, materialize
+    from repro.models.transformer import lm_loss
+
+    cfg = get_smoke(arch)
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32))),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)))}
+    plan = build_plan(family, 0.5, nb=cfg.pattern_nb)
+    dense = lm_loss(cfg, params, batch, plan.identity())[0]
+    compact = lm_loss(cfg, params, batch, plan.bind(2, 1))[0]
+    assert np.isfinite(float(dense)) and np.isfinite(float(compact))
+    assert float(dense) != float(compact), \
+        f"{family} pattern had no effect on {arch}"
+
+
+# --------------------------------------------------------------------------
+# 4. plan × mesh composition on the ambient device mesh
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ACTIVE_FAMILIES)
+def test_family_plan_validates_on_host_mesh(family):
+    """Family-aware validate_mesh dims accept the smoke configs on the
+    current device mesh (1 device locally; 8 forced in the CI sweep)."""
+    from repro.configs import get_smoke
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.sharding import PROFILES
+    from repro.train.distributed import plan_dims
+
+    mesh = make_host_mesh()
+    rules = PROFILES["tp"]
+    for arch in ("qwen2_1_5b", "qwen3_moe_30b_a3b", "mamba2_1_3b"):
+        cfg = get_smoke(arch)
+        plan = build_plan(family, 0.5, nb=cfg.pattern_nb)
+        dims = plan_dims(plan, cfg)
+        plan.validate_mesh(mesh, rules, dims=dims)  # must not raise
+        assert ("ffn_kept" in dims) == bool(cfg.d_ff)
+
+
+def test_bucket_universe_shared_across_families():
+    """buckets() depends only on the searched K — every family with the
+    same dist exposes the same executable universe to trainer + serve."""
+    plans = [build_plan(f, 0.5, nb=8, seed=0) for f in ACTIVE_FAMILIES]
+    universes = {tuple(p.buckets()) for p in plans}
+    assert len(universes) == 1
+    for p in plans:
+        for step in range(50):
+            assert p.sample(step).bucket in p.buckets()

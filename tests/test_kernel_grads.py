@@ -230,6 +230,121 @@ def test_rows_dgrad_does_not_recompile_across_biases():
 
 
 # --------------------------------------------------------------------------
+# Registry-generic sweep: every differentiable family×backend pair — grads
+# vs oracle autodiff, exactly-zero dropped-unit grads, no recompiles.
+# A family registered tomorrow is covered here with zero new test code.
+# --------------------------------------------------------------------------
+
+def _differentiable_pairs():
+    from repro.core.plan import BACKENDS, FAMILIES
+    return [(name, be)
+            for name in sorted(FAMILIES) if name != "identity"
+            and FAMILIES[name].differentiable
+            for be in FAMILIES[name].backends
+            if BACKENDS[be].differentiable]
+
+
+def _ffn_case(seed=0):
+    d, dff, m, nb = 64, 256, 32, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return (nb, _rand(ks[0], (m, d)), _rand(ks[1], (d, dff)),
+            _rand(ks[2], (dff, d)), _rand(ks[3], (d, dff)))
+
+
+@pytest.mark.parametrize("family,backend", _differentiable_pairs())
+def test_every_family_backend_grads_match_oracle_autodiff(family, backend):
+    """jax.grad through apply_ffn(backend) == jax.grad through the family's
+    mask-multiply oracle, <= 1e-5, for every (dp, bias)."""
+    from repro.core.plan import get_family
+    fam = get_family(family)
+    nb, x, w_up, w_down, w_gate = _ffn_case(hash(family) % 97)
+    for dp, bias in [(2, 0), (2, 1), (4, 3)]:
+        def loss(fn, _bias=bias, _dp=dp):
+            def inner(x, wu, wd, wg):
+                return (fn(x, wu, wd, wg, dp=_dp, bias=_bias, nb=nb,
+                           act=jax.nn.silu) ** 2).sum()
+            return inner
+
+        apply = functools.partial(fam.apply_ffn, backend=backend)
+        got = jax.grad(loss(apply), (0, 1, 2, 3))(x, w_up, w_down, w_gate)
+        want = jax.grad(loss(fam.oracle_ffn), (0, 1, 2, 3))(x, w_up,
+                                                            w_down, w_gate)
+        for g, r, nm in zip(got, want, ("x", "w_up", "w_down", "w_gate")):
+            _assert_close(g, r, f"{family}/{backend} d{nm} "
+                                f"dp={dp} bias={bias}",
+                          rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("family,backend", _differentiable_pairs())
+def test_every_family_backend_dropped_unit_grads_exactly_zero(family,
+                                                              backend):
+    """Wherever the oracle's autodiff produces a structural zero (a dropped
+    row/column/tile never touched the loss), the compact backend's grad is
+    exactly zero too — bitwise, not allclose — and that zero set is
+    non-empty for dp > 1 whatever the family's granularity."""
+    from repro.core.plan import get_family
+    fam = get_family(family)
+    nb, x, w_up, w_down, w_gate = _ffn_case(hash(family) % 89 + 1)
+    dp, bias = 4, 2
+
+    def loss(fn):
+        def inner(wu, wd, wg):
+            return (fn(x, wu, wd, wg, dp=dp, bias=bias, nb=nb,
+                       act=jax.nn.silu) ** 2).sum()
+        return inner
+
+    apply = functools.partial(fam.apply_ffn, backend=backend)
+    got = jax.grad(loss(apply), (0, 1, 2))(w_up, w_down, w_gate)
+    want = jax.grad(loss(fam.oracle_ffn), (0, 1, 2))(w_up, w_down, w_gate)
+    dropped_total = 0
+    for g, r, nm in zip(got, want, ("w_up", "w_down", "w_gate")):
+        zero = np.asarray(r) == 0.0
+        dropped_total += int(zero.sum())
+        assert np.all(np.asarray(g)[zero] == 0.0), \
+            f"{family}/{backend} {nm}: nonzero grad on a dropped unit"
+    assert dropped_total > 0, \
+        f"{family}/{backend}: dp={dp} produced no dropped weights at all"
+
+
+def test_no_family_backend_recompiles_across_biases():
+    """One compiled executable per (kernel, dp) across ALL biases, checked
+    generically: after warming bias 0, running every other bias for every
+    pallas-capable family must not grow ANY kernel cache."""
+    from repro.core.plan import FAMILIES
+    from repro.kernels import (rdp_matmul, rdp_matmul_bwd, tdp_matmul,
+                               tdp_matmul_bwd)
+
+    caches = {f"{m.__name__.rsplit('.', 1)[-1]}.{nm}": obj
+              for m in (rdp_matmul, rdp_matmul_bwd, tdp_matmul,
+                        tdp_matmul_bwd)
+              for nm, obj in vars(m).items()
+              if callable(obj) and hasattr(obj, "_cache_size")}
+    assert caches, "no jitted kernels discovered"
+    nb, x, w_up, w_down, w_gate = _ffn_case(3)
+    dp = 4
+    pallas_fams = [n for n in sorted(FAMILIES)
+                   if "pallas" in FAMILIES[n].backends and n != "identity"]
+
+    def run(fam_name, bias):
+        fam = FAMILIES[fam_name]
+        def loss(wu, wd):
+            return (fam.apply_ffn(x, wu, wd, w_gate, dp=dp, bias=bias,
+                                  nb=nb, backend="pallas",
+                                  act=jax.nn.silu) ** 2).sum()
+        return jax.grad(loss, (0, 1))(w_up, w_down)
+
+    for fam_name in pallas_fams:
+        run(fam_name, 0)                         # warm every kernel at dp
+    sizes = {nm: fn._cache_size() for nm, fn in caches.items()}
+    for fam_name in pallas_fams:
+        for bias in range(1, dp):
+            run(fam_name, bias)
+    for nm, fn in caches.items():
+        assert fn._cache_size() == sizes[nm], \
+            f"{nm} recompiled across biases (bias must stay traced)"
+
+
+# --------------------------------------------------------------------------
 # End-to-end: jax.grad(lm_loss) pallas vs slice over EVERY plan bucket
 # --------------------------------------------------------------------------
 

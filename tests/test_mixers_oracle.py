@@ -130,7 +130,7 @@ def test_ssd_final_state_continues_decode():
 
 
 @given(st.integers(1, 3), st.sampled_from([5, 8, 13]))
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=10, deadline=None, derandomize=True)
 def test_attention_rows_sum_to_one_property(b, s):
     """Softmax invariant survives the online (chunked) computation: output
     of attention over constant v == that constant."""
