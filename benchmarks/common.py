@@ -17,7 +17,9 @@ one file per claim and lets CI smoke-assert on any bench the same way.
 from __future__ import annotations
 
 import json
+import subprocess
 import time
+from datetime import datetime, timezone
 from pathlib import Path
 from typing import Callable
 
@@ -56,11 +58,35 @@ def emit(rows: list[dict], path: str | None = None):
         Path(path).write_text(text + "\n")
 
 
+def _provenance() -> dict:
+    """Attribution stamp for a bench record: which code, toolchain and
+    devices produced the numbers.  Git failures (no repo, no commit yet)
+    degrade to "unknown" rather than breaking a bench run."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=Path(__file__).parent,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    devices = jax.devices()
+    return {
+        "git_sha": sha or "unknown",
+        "jax_version": jax.__version__,
+        "device_kind": devices[0].device_kind,
+        "device_count": len(devices),
+        "timestamp": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+    }
+
+
 def bench_record(bench: str, *, arch: str | None = None,
                  config: dict | None = None, **results) -> dict:
-    """Assemble one BENCH_*.json record (schema above)."""
+    """Assemble one BENCH_*.json record (schema above, plus a
+    ``provenance`` stamp so the bench trajectory is attributable across
+    PRs: git SHA, jax version, device kind/count, ISO timestamp)."""
     rec = {"bench": bench, "arch": arch,
-           "backend": jax.default_backend(), "config": dict(config or {})}
+           "backend": jax.default_backend(), "config": dict(config or {}),
+           "provenance": _provenance()}
     rec.update(results)
     return rec
 

@@ -148,10 +148,15 @@ def _operand_names(line: str, opcode: str) -> list[str]:
         buf.append(c)
         j += 1
     inner = "".join(buf)
+    if "%" in inner:
+        # Real compiled dumps inline operand shapes with layout braces
+        # ("dot(f32[64,64]{1,0} %fusion.2, ...)") — the braces' commas break
+        # naive splitting, so pull the %-prefixed names directly.
+        return re.findall(r"%([\w.\-]+)", inner)
     names = []
     for part in inner.split(","):
         part = part.strip()
-        m = _OPERAND_NAME.match(part.lstrip("%"))
+        m = _OPERAND_NAME.match(part)
         if m:
             names.append(m.group(1))
     return names

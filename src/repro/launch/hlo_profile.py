@@ -43,7 +43,7 @@ def attribute(hlo: str, default_group: int = 1):
                           "collective-permute": 1.0}[kind]
                 meta = re.search(r'op_name="([^"]*)"', line)
                 items.append((kind, shape[:60], n_full * factor,
-                              (meta.group(1)[-90:] if meta else "")))
+                              (meta.group(1) if meta else "")))
             elif opcode == "dot":
                 mc = _CONTRACT.search(line)
                 ops = _operand_names(line, "dot")
@@ -62,7 +62,7 @@ def attribute(hlo: str, default_group: int = 1):
                         meta = re.search(r'op_name="([^"]*)"', line)
                         items.append(("dot", shape[:60],
                                       2.0 * out_n * csize,
-                                      (meta.group(1)[-90:] if meta else "")))
+                                      (meta.group(1) if meta else "")))
             if opcode == "while":
                 m2 = _WHILE_ATTRS.search(line)
                 if m2:
@@ -94,21 +94,52 @@ def attribute(hlo: str, default_group: int = 1):
     return totals
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("hlo")
+def scoped_dot_flops(hlo: str, scope: str, default_group: int = 1) -> float:
+    """Trip-folded dot FLOPs attributed to one ``jax.named_scope``.
+
+    Sums every dot whose ``op_name`` metadata contains ``scope`` — e.g.
+    ``scope="ffn_pattern"`` isolates the pattern-compacted FFN matmuls
+    (``models/layers.py`` wraps ``ffn_block`` in that scope), which is how
+    the trainer's ``warm_start()`` gauges the 1/dp FLOP claim per bucket.
+    """
+    totals = attribute(hlo, default_group=default_group)
+    return sum(v for (kind, _, opname), v in totals.items()
+               if kind == "dot" and scope in opname)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.hlo_profile",
+        description="Rank HLO instructions by trip-count-corrected cost.")
+    ap.add_argument("hlo", help="path to an HLO text dump (compiled module)")
     ap.add_argument("--top", type=int, default=20)
     ap.add_argument("--kind", default="coll", choices=["coll", "dot"])
-    ap.add_argument("--group", type=int, default=256)
-    args = ap.parse_args()
-    totals = attribute(open(args.hlo).read(), default_group=args.group)
+    ap.add_argument("--group", type=int, default=256,
+                    help="default collective group size when the HLO "
+                         "omits replica_groups")
+    ap.add_argument("--scope", default=None,
+                    help="only show instructions whose op_name contains "
+                         "this named_scope substring")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.hlo) as f:
+            hlo = f.read()
+    except OSError as e:
+        ap.exit(2, f"error: cannot read {args.hlo!r}: {e}\n")
+    totals = attribute(hlo, default_group=args.group)
+    if not totals:
+        print("no attributable instructions found "
+              "(is this an optimized HLO text dump?)")
+        return 1
     rows = [(v, k) for k, v in totals.items()
-            if (k[0] == "dot") == (args.kind == "dot")]
+            if (k[0] == "dot") == (args.kind == "dot")
+            and (args.scope is None or args.scope in k[2])]
     rows.sort(reverse=True)
     unit = "FLOP" if args.kind == "dot" else "wire-B"
     for v, (kind, shape, opname) in rows[:args.top]:
-        print(f"{v:.3e} {unit:7s} {kind:18s} {shape:40s} {opname}")
+        print(f"{v:.3e} {unit:7s} {kind:18s} {shape:40s} {opname[-90:]}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -30,6 +30,7 @@ from repro.core.plan import FAMILIES, build_plan, identity_plan
 from repro.data.pipeline import SyntheticLMData
 from repro.launch.mesh import make_host_mesh, mesh_from_spec
 from repro.models import init_lm, materialize
+from repro.obs import Observability
 from repro.optim.optimizers import AdamW
 from repro.parallel.sharding import PROFILES
 from repro.train.distributed import DistributedTrainer
@@ -69,6 +70,16 @@ def main(argv=None):
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSONL of per-step "
+                         "spans (data/dispatch/compile/train_step) here")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the final metrics-registry snapshot "
+                         "(JSONL; use .prom suffix for Prometheus text)")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="precompile every plan bucket before step 0 "
+                         "(also gauges per-bucket FLOPs/bytes from the "
+                         "compiled HLO and freezes the recompile watchdog)")
     args = ap.parse_args(argv)
 
     spec = get_spec(normalize(args.arch))
@@ -98,14 +109,33 @@ def main(argv=None):
                          compress_grads=args.compress_grads)
     mesh = (mesh_from_spec(args.mesh_shape) if args.mesh_shape
             else make_host_mesh())
+    obs = Observability.create(trace_path=args.trace, plan=plan)
     trainer = DistributedTrainer(cfg, AdamW(), params, mesh=mesh,
-                                 profile=args.profile, plan=plan, tcfg=tcfg)
+                                 profile=args.profile, plan=plan, tcfg=tcfg,
+                                 obs=obs)
     print(f"mesh {dict(mesh.shape)} profile {args.profile} "
           f"buckets {trainer.plan.buckets()}", flush=True)
+    if args.warm_start:
+        trainer.warm_start(data.batch)
     history = trainer.run(data.batch)
     print(f"final loss: {history[-1]['loss']:.4f} "
           f"(from {history[0]['loss']:.4f}); "
           f"stragglers flagged: {trainer.watchdog.flagged}")
+    if obs.drift is not None:
+        drift = obs.drift.report(min_samples=min(50, args.steps))
+        print(f"pattern drift: {drift['verdict']} "
+              f"(max dev {drift['max_abs_deviation']:.4f} over "
+              f"{drift['samples']} draws)")
+    if obs.watchdog.violation_count:
+        print(f"RECOMPILE VIOLATIONS: {obs.watchdog.violation_count}")
+    if args.trace:
+        print(f"trace -> {obs.tracer.write()}")
+    if args.metrics_out:
+        text = (obs.registry.to_prometheus()
+                if args.metrics_out.endswith(".prom")
+                else obs.registry.to_jsonl())
+        Path(args.metrics_out).write_text(text)
+        print(f"metrics -> {args.metrics_out}")
     if args.out:
         Path(args.out).write_text(json.dumps(history))
     return history

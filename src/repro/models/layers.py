@@ -333,8 +333,12 @@ def ffn_block(params, x, pat=NO_PATTERN, *, layer: int = 0,
     # inactive patterns (dp=1) dispatch through the identity family — one
     # dense-FFN body lives in the registry instead of being duplicated here
     fam = plan_mod.get_family(bp.family if bp.active else "identity")
-    out = fam.apply_ffn(x, w_up, w_down, w_gate, dp=bp.dp, bias=bp.bias,
-                        nb=bp.nb, backend=bp.backend, act=act)
+    # named_scope lands in HLO op_name metadata, letting hlo_profile
+    # attribute the pattern-compacted matmuls (1/dp FLOP gauging at
+    # warm_start) without guessing from shapes
+    with jax.named_scope("ffn_pattern"):
+        out = fam.apply_ffn(x, w_up, w_down, w_gate, dp=bp.dp, bias=bp.bias,
+                            nb=bp.nb, backend=bp.backend, act=act)
     return constrain(out, ("batch", "res_seq", "embed"))
 
 

@@ -1,0 +1,145 @@
+"""Recompile watchdog: the executable universe must stay ``plan.buckets()``.
+
+Pattern bucketing is the repo's central systems invariant (DESIGN.md §2):
+the trainer and the serve scheduler each keep ONE compiled executable per
+``(dp, bias)`` bucket, and ``warm_start()`` precompiles them all.  Before
+this module the invariant was only checked post-hoc by scattered
+``_cache_size()`` asserts in tests — a mid-run recompile in production
+showed up as nothing but a mysterious multi-second stall.
+
+``RecompileWatchdog`` makes the invariant observable:
+
+* ``expect(keys)`` declares the allowed compile universe (the plan's
+  buckets); compiling anything else is a violation the moment it happens.
+* ``freeze()`` (after warm-up) declares the universe complete: ANY further
+  compile is a violation.
+* Violations increment ``recompile_violations_total`` in the metrics
+  registry and emit a ``warnings.warn`` — visible, but never fatal on the
+  hot path; ``assert_clean()`` is the test/CI-facing hard check.
+* ``watch_jit(fn, label)`` snapshots a ``jax.jit`` callable's
+  ``_cache_size()`` so kernel-level caches (the Pallas fwd/bwd kernels)
+  are covered by the same API — this replaces the ad-hoc asserts in
+  tests/test_kernel_grads.py.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Iterable, Optional
+
+
+class RecompileViolation(AssertionError):
+    """Raised by ``assert_clean`` when unexpected compiles were observed."""
+
+
+class RecompileWatchdog:
+    """Tracks compiles against a declared executable universe."""
+
+    def __init__(self, registry=None, name: str = "", project=None):
+        self.name = name
+        self.registry = registry
+        self.expected: Optional[set] = None   # None = universe not declared
+        self.frozen = False
+        self.compiles: dict = {}              # key -> compile count
+        self.violations: list[dict] = []
+        self._jit_watch: dict[str, tuple] = {}  # label -> (fn, baseline)
+        # maps a compile key to its membership key before the expected-set
+        # check — the serve scheduler keys executables ("decode", bucket) /
+        # ("prefill_*", bucket, length) while the universe is plain buckets
+        self.project = project
+
+    # ---- universe declaration ---------------------------------------------
+    def expect(self, keys: Iterable) -> "RecompileWatchdog":
+        """Declare the allowed compile universe (e.g. ``plan.buckets()``)."""
+        self.expected = set(keys)
+        return self
+
+    def freeze(self) -> "RecompileWatchdog":
+        """Declare warm-up complete: any further compile is a violation."""
+        self.frozen = True
+        return self
+
+    # ---- observation -------------------------------------------------------
+    def record_compile(self, key) -> bool:
+        """Record one cache-miss compile of ``key``.
+
+        Returns True when the compile was expected (inside the declared
+        universe, before freeze); False when it violated the invariant.
+        """
+        self.compiles[key] = self.compiles.get(key, 0) + 1
+        member = self.project(key) if self.project is not None else key
+        reason = None
+        if self.frozen:
+            reason = "compile after freeze() — warm-up did not cover it"
+        elif self.expected is not None and member not in self.expected:
+            reason = "key outside the declared executable universe"
+        elif self.compiles[key] > 1:
+            reason = "duplicate compile of an already-compiled key"
+        if reason is None:
+            return True
+        self._violate({"key": repr(key), "reason": reason,
+                       "count": self.compiles[key]})
+        return False
+
+    def _violate(self, rec: dict) -> None:
+        self.violations.append(rec)
+        if self.registry is not None:
+            self.registry.counter("recompile_violations_total",
+                                  {"watchdog": self.name or "default"}).inc()
+        warnings.warn(
+            f"recompile watchdog{f' [{self.name}]' if self.name else ''}: "
+            f"{rec['reason']} ({rec['key']}) — this stalls the hot path "
+            f"for a full XLA compile", RuntimeWarning, stacklevel=3)
+
+    # ---- jit-cache watching (kernel-level caches) --------------------------
+    def watch_jit(self, fn, label: str) -> "RecompileWatchdog":
+        """Watch a ``jax.jit`` callable's compile cache for growth.
+
+        Snapshot the current ``_cache_size()`` as the baseline; a later
+        ``check_jit()`` reports any growth as violations.  Idempotent per
+        label (re-watching re-baselines).
+        """
+        if not hasattr(fn, "_cache_size"):
+            raise TypeError(f"{label}: not a jax.jit callable "
+                            f"(no _cache_size)")
+        self._jit_watch[label] = (fn, fn._cache_size())
+        return self
+
+    def check_jit(self) -> list[dict]:
+        """Report (and record) every watched jit cache that grew."""
+        grown = []
+        for label, (fn, baseline) in self._jit_watch.items():
+            size = fn._cache_size()
+            if size > baseline:
+                rec = {"key": label,
+                       "reason": f"jit cache grew {baseline} -> {size}",
+                       "count": size - baseline}
+                grown.append(rec)
+                self._violate(rec)
+                self._jit_watch[label] = (fn, size)   # don't double-report
+        return grown
+
+    # ---- verdicts ----------------------------------------------------------
+    @property
+    def violation_count(self) -> int:
+        return len(self.violations)
+
+    def report(self) -> dict:
+        """Summary dict: compiles seen, universe coverage, violations."""
+        missing = (sorted(k for k in self.expected
+                          if k not in self.compiles)
+                   if self.expected is not None else [])
+        return {"compiles": {repr(k): v for k, v in
+                             sorted(self.compiles.items(), key=repr)},
+                "expected": (sorted(repr(k) for k in self.expected)
+                             if self.expected is not None else None),
+                "missing": [repr(k) for k in missing],
+                "frozen": self.frozen,
+                "violations": list(self.violations)}
+
+    def assert_clean(self) -> None:
+        """Hard check for tests/CI: raise on any recorded violation."""
+        self.check_jit()
+        if self.violations:
+            raise RecompileViolation(
+                f"{len(self.violations)} recompile violation(s): "
+                f"{self.violations}")

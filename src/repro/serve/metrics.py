@@ -3,7 +3,11 @@
 All timestamps come from the server's injectable clock, so the same module
 serves wall-clock benchmarking and virtual-clock deterministic replay.  The
 ``snapshot()`` dict is what ``benchmarks/serve_bench.py`` writes to
-``BENCH_serve.json``.
+``BENCH_serve.json`` — its schema is frozen (the bench trajectory diffs it
+across PRs), which is why ``Telemetry`` keeps its historical attribute API
+even though storage now lives in one shared ``obs.MetricsRegistry``: the
+same registry the trainer uses, so a serve run also exports JSONL /
+Prometheus text and composes with the recompile watchdog.
 
 Latency definitions (standard LLM-serving conventions):
 * **TTFT**  — submit → first generated token of a sequence.
@@ -13,73 +17,88 @@ Latency definitions (standard LLM-serving conventions):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import numpy as np
+from repro.obs.registry import Histogram as _ObsHistogram
+from repro.obs.registry import MetricsRegistry, bucket_labels
 
 
-class Histogram:
-    """Exact histogram over recorded samples (serving runs are bounded, so
-    we keep raw values and compute percentiles on demand)."""
+class Histogram(_ObsHistogram):
+    """Serving-facing histogram: exact below ``cap`` samples, reservoir
+    (uniform subsample, exact count/mean/max) above it — bounded memory for
+    long-running servers, bitwise-identical summaries for bounded runs."""
 
-    def __init__(self, name: str):
-        self.name = name
-        self._values: list[float] = []
-
-    def record(self, value: float) -> None:
-        self._values.append(float(value))
-
-    @property
-    def count(self) -> int:
-        return len(self._values)
-
-    def summary(self) -> dict:
-        if not self._values:
-            return {"count": 0, "mean": 0.0, "p50": 0.0, "p90": 0.0,
-                    "p95": 0.0, "max": 0.0}
-        v = np.asarray(self._values, np.float64)
-        return {
-            "count": int(v.size),
-            "mean": float(v.mean()),
-            "p50": float(np.percentile(v, 50)),
-            "p90": float(np.percentile(v, 90)),
-            "p95": float(np.percentile(v, 95)),
-            "max": float(v.max()),
-        }
+    def __init__(self, name: str, cap: int = _ObsHistogram.DEFAULT_CAP):
+        super().__init__(name, (), cap)
 
 
-@dataclasses.dataclass
+def _registry_counter(metric_name: str, doc: str):
+    """An int-like Telemetry attribute backed by a registry counter.
+
+    The scheduler mutates telemetry with ``tel.decode_steps += 1``; a
+    property pair keeps that API while the value lives in the registry
+    (augmented assignment reads via the getter, writes the new total via
+    the setter, which records the delta)."""
+
+    def fget(self) -> int:
+        return int(self.registry.counter(metric_name).value)
+
+    def fset(self, value) -> None:
+        c = self.registry.counter(metric_name)
+        c.inc(value - c.value)   # Counter.inc raises if the value decreased
+
+    return property(fget, fset, doc=doc)
+
+
 class Telemetry:
-    """Mutable metric sink the scheduler/server record into."""
+    """Metric sink the scheduler/server record into (registry-backed)."""
 
-    ttft: Histogram = dataclasses.field(
-        default_factory=lambda: Histogram("ttft"))
-    tpot: Histogram = dataclasses.field(
-        default_factory=lambda: Histogram("tpot"))
-    queue_delay: Histogram = dataclasses.field(
-        default_factory=lambda: Histogram("queue_delay"))
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        reg = self.registry
+        self.ttft = reg.histogram("serve_ttft_s")
+        self.tpot = reg.histogram("serve_tpot_s")
+        self.queue_delay = reg.histogram("serve_queue_delay_s")
 
-    tokens_generated: int = 0
-    prompt_tokens: int = 0
-    requests_completed: int = 0
-    requests_rejected: int = 0
-    members_completed: int = 0
-    decode_steps: int = 0
-    prefill_chunks: int = 0
+    tokens_generated = _registry_counter(
+        "serve_tokens_generated_total", "generated tokens, all sequences")
+    prompt_tokens = _registry_counter(
+        "serve_prompt_tokens_total", "prompt tokens prefilled")
+    requests_completed = _registry_counter(
+        "serve_requests_completed_total", "fully finished requests")
+    requests_rejected = _registry_counter(
+        "serve_requests_rejected_total", "admission-control rejections")
+    members_completed = _registry_counter(
+        "serve_members_completed_total", "finished ensemble members")
+    decode_steps = _registry_counter(
+        "serve_decode_steps_total", "batched decode steps executed")
+    prefill_chunks = _registry_counter(
+        "serve_prefill_chunks_total", "prefill chunks executed")
 
     # paper tie-in: FLOP cost of generated tokens relative to dense.  Each
     # token of a (dp, b) ensemble member counts 1/dp of a dense-FFN token.
-    ffn_flop_weighted_tokens: float = 0.0
-    # tokens decoded per pattern bucket, keyed "(dp, b)"
-    bucket_tokens: dict = dataclasses.field(default_factory=dict)
+    @property
+    def ffn_flop_weighted_tokens(self) -> float:
+        return self.registry.counter("serve_ffn_flop_weighted_tokens").value
+
+    @property
+    def bucket_tokens(self) -> dict:
+        """Tokens decoded per pattern bucket, keyed ``"dp={dp},b={b}"``
+        (derived view over the labeled registry counters)."""
+        out = {}
+        for m in self.registry.metrics():
+            if m.name == "serve_bucket_tokens_total":
+                lbl = dict(m.labels)
+                out[f"dp={lbl['dp']},b={lbl['bias']}"] = int(m.value)
+        return out
 
     # ------------------------------------------------------------------
     def record_decode_tokens(self, dp: int, bias: int, n: int) -> None:
-        self.tokens_generated += n
-        self.ffn_flop_weighted_tokens += n / dp
-        key = f"dp={dp},b={bias}"
-        self.bucket_tokens[key] = self.bucket_tokens.get(key, 0) + n
+        reg = self.registry
+        reg.counter("serve_tokens_generated_total").inc(n)
+        reg.counter("serve_ffn_flop_weighted_tokens").inc(n / dp)
+        reg.counter("serve_bucket_tokens_total",
+                    bucket_labels(dp, bias)).inc(n)
 
     def mean_ffn_flop_fraction(self) -> float:
         """Mean per-token FFN FLOP fraction vs dense (1.0 = no dropout)."""

@@ -43,6 +43,7 @@ from repro.models.transformer import ModelConfig
 
 from . import engine
 from .cache_pool import CachePool
+from repro.obs import Observability
 from .metrics import Telemetry
 
 
@@ -124,7 +125,8 @@ class Scheduler:
                  pattern_impl: Optional[str] = None,
                  eos_token: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None,
-                 pad_buckets: bool = True):
+                 pad_buckets: bool = True,
+                 obs: Optional[Observability] = None):
         if cfg.n_codebooks or cfg.vision_tokens:
             raise ValueError(
                 f"{cfg.name}: modality-frontend archs (codebooks / vision) "
@@ -154,7 +156,15 @@ class Scheduler:
         self.pattern_impl = plan.backend if plan is not None \
             else (pattern_impl or "pallas")
         self.eos_token = eos_token
-        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        # observability: watchdog membership is the bucket component of the
+        # executable-cache key; a fresh telemetry shares the obs registry so
+        # one snapshot covers both
+        self.obs = obs if obs is not None \
+            else Observability.create(plan=self.plan)
+        self.obs.watchdog.project = lambda key: key[1]
+        self.obs.watchdog.expect(self.possible_buckets())
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry(registry=self.obs.registry)
         self.pad_buckets = pad_buckets
         self.chunked = engine.supports_chunked_prefill(cfg)
 
@@ -400,6 +410,7 @@ class Scheduler:
     def _decode_fn(self, bucket: tuple):
         key = ("decode", bucket)
         if key not in self._fns:
+            self.obs.watchdog.record_compile(key)
             pat = self._bucket_pat(bucket)
             self._fns[key] = jax.jit(functools.partial(
                 engine.decode_step_ragged, self.cfg, pat=pat))
@@ -410,6 +421,7 @@ class Scheduler:
         # each distinct remainder length compiles once
         key = ("prefill_extend", bucket, chunk_len)
         if key not in self._fns:
+            self.obs.watchdog.record_compile(key)
             pat = self._bucket_pat(bucket)
             self._fns[key] = jax.jit(functools.partial(
                 engine.prefill_extend, self.cfg, pat=pat))
@@ -418,6 +430,7 @@ class Scheduler:
     def _prefill_full_fn(self, bucket: tuple, prompt_len: int):
         key = ("prefill_full", bucket, prompt_len)
         if key not in self._fns:
+            self.obs.watchdog.record_compile(key)
             pat = self._bucket_pat(bucket)
             cfg, max_len = self.cfg, self.max_len
 

@@ -44,6 +44,7 @@ from jax.sharding import NamedSharding, PartitionSpec as PSpec
 from repro.core import plan as plan_mod
 from repro.core.plan import DropoutPlan, identity_plan
 from repro.launch.mesh import make_host_mesh
+from repro.obs import Observability, bucket_labels
 from repro.models.transformer import (ModelConfig, batch_logical_axes,
                                       init_lm)
 from repro.optim.optimizers import cosine_schedule
@@ -214,7 +215,7 @@ class DistributedTrainer:
                  mesh=None, profile: str | ShardingRules = "tp",
                  plan: Optional[DropoutPlan] = None,
                  tcfg: Optional[TrainerConfig] = None,
-                 params_axes=None):
+                 params_axes=None, obs: Optional[Observability] = None):
         self.cfg = cfg
         self.optimizer = optimizer
         self.mesh = mesh if mesh is not None else make_host_mesh()
@@ -271,6 +272,11 @@ class DistributedTrainer:
                                      self.tcfg.steps)
         self._buckets: dict[tuple, Callable] = {}
         self._batch_sh = None
+        # observability: pass a preconfigured bundle (e.g. with tracing on)
+        # or get the always-on default (registry + watchdog, no trace file)
+        self.obs = obs if obs is not None \
+            else Observability.create(plan=self.plan)
+        self.obs.watchdog.expect(self.plan.buckets())
         self.watchdog = StragglerWatchdog()
         self.async_ckpt = ckpt_lib.AsyncCheckpointer()
         self.start_step = 0
@@ -300,6 +306,9 @@ class DistributedTrainer:
     def _step_fn(self, dp: int, bias: int, batch) -> Callable:
         key = (dp, bias)
         if key not in self._buckets:
+            self.obs.watchdog.record_compile(key)
+            self.obs.registry.counter("train_compiles_total",
+                                      bucket_labels(dp, bias)).inc()
             pat = self.plan.bind(dp, bias) if dp > 1 else plan_mod.IDENTITY
             base = make_train_step(
                 self.cfg, self.optimizer,
@@ -327,17 +336,51 @@ class DistributedTrainer:
 
         Training then never stalls on a mid-run compile; afterwards the
         compile cache holds exactly ``len(plan.buckets())`` executables
-        (the acceptance invariant — bias is static per bucket).  Runs each
+        (the acceptance invariant — bias is static per bucket) and the
+        watchdog is frozen: any further compile is a violation.  Runs each
         bucket once on a COPY of the state (donated and discarded), so the
         real state is untouched.
+
+        Each bucket's compiled module is also analyzed
+        (``launch/hlo_analysis`` + the ``ffn_pattern`` named-scope
+        attribution of ``launch/hlo_profile``) into per-bucket gauges —
+        ``ffn_pattern_dot_flops`` validates the paper's 1/dp FFN FLOP
+        claim live, on the module XLA actually built.
         """
         batch = jax.tree.map(jnp.asarray, batch_fn(0))
+        tracer = self.obs.tracer
         with set_mesh_and_rules(self.mesh, self.rules):
             for dp, b in self.plan.buckets():
                 fn = self._step_fn(dp, b, batch)
                 scratch = jax.tree.map(jnp.copy, self.state)
+                with tracer.span("compile", dp=dp, bias=b):
+                    # lower().compile() populates the jit cache, so the
+                    # execution below (and every run() step) reuses it
+                    compiled = fn.lower(scratch, batch,
+                                        jnp.float32(0.0)).compile()
+                self._gauge_compiled(dp, b, compiled)
                 out, _ = fn(scratch, batch, jnp.float32(0.0))
                 jax.block_until_ready(jax.tree.leaves(out)[0])
+        self.obs.watchdog.freeze()
+
+    def _gauge_compiled(self, dp: int, bias: int, compiled) -> None:
+        """Per-bucket FLOP/byte gauges from the compiled HLO module."""
+        from repro.launch.hlo_analysis import analyze_hlo
+        from repro.launch.hlo_profile import scoped_dot_flops
+        try:
+            hlo = compiled.as_text()
+        except Exception:   # backend without HLO text dumps
+            return
+        labels = bucket_labels(dp, bias, family=self.plan.family,
+                               backend=self.plan.backend)
+        analysis = analyze_hlo(hlo)
+        reg = self.obs.registry
+        reg.gauge("module_dot_flops", labels).set(analysis["dot_flops"])
+        reg.gauge("module_dot_bytes", labels).set(analysis["dot_bytes"])
+        reg.gauge("module_collective_bytes", labels).set(
+            analysis["collective_bytes"])
+        reg.gauge("ffn_pattern_dot_flops", labels).set(
+            scoped_dot_flops(hlo, "ffn_pattern"))
 
     # ---- fault tolerance ---------------------------------------------------
     def maybe_resume(self):
@@ -374,17 +417,30 @@ class DistributedTrainer:
         """Train until ``until`` (default tcfg.steps); returns history."""
         until = until or self.tcfg.steps
         self.maybe_resume()
+        tracer, reg = self.obs.tracer, self.obs.registry
         with set_mesh_and_rules(self.mesh, self.rules):
             for step in range(self.start_step, until):
                 bound = self.plan.sample(step)
-                batch = jax.tree.map(jnp.asarray, batch_fn(step))
-                fn = self._step_fn(bound.dp, bound.bias, batch)
+                if self.obs.drift is not None:
+                    self.obs.drift.observe_bound(bound)
+                with tracer.span("data", step=step):
+                    batch = jax.tree.map(jnp.asarray, batch_fn(step))
+                with tracer.span("dispatch", dp=bound.dp, bias=bound.bias):
+                    fn = self._step_fn(bound.dp, bound.bias, batch)
                 t0 = time.perf_counter()
-                self.state, metrics = fn(self.state, batch,
-                                         jnp.float32(self.lr_fn(step)))
-                jax.block_until_ready(metrics["loss"])
+                with tracer.span("train_step", step=step, dp=bound.dp,
+                                 bias=bound.bias):
+                    self.state, metrics = fn(self.state, batch,
+                                             jnp.float32(self.lr_fn(step)))
+                    jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t0
                 slow = self.watchdog.observe(dt)
+                blabels = bucket_labels(bound.dp, bound.bias)
+                reg.histogram("train_step_time_s", blabels).record(dt)
+                reg.counter("train_steps_total", blabels).inc()
+                if slow:
+                    reg.counter("train_stragglers_total", blabels).inc()
+                    tracer.instant("straggler", step=step, dt=dt)
                 rec = {"step": step, "loss": float(metrics["loss"]),
                        "dp": bound.dp, "bias": bound.bias, "dt": dt,
                        "straggler": slow}

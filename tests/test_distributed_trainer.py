@@ -114,11 +114,14 @@ def test_sharded_trainer_matches_single_device():
 
         ta = mk(jax.make_mesh((2, 4), ("data", "model")))
         ta.warm_start(data.batch)
+        # watchdog: warm_start covered exactly the bucket universe...
+        rep = ta.obs.watchdog.report()
+        assert rep["frozen"] and not rep["missing"], rep
         assert len(ta._buckets) == len(plan.buckets()), \\
             (sorted(ta._buckets), plan.buckets())
         ha = ta.run(data.batch)
-        # warm_start covered the full bucket universe: no new compiles
-        assert len(ta._buckets) == len(plan.buckets())
+        # ...and the run triggered no compile beyond it
+        ta.obs.watchdog.assert_clean()
 
         tb = mk(jax.make_mesh((1, 1), ("data", "model")))
         hb = tb.run(data.batch)

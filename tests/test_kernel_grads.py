@@ -25,6 +25,7 @@ from repro.kernels.autodiff import (rdp_matmul_cols_vjp, rdp_matmul_rows_vjp,
                                     tdp_matmul_vjp)
 from repro.kernels.rdp_matmul_bwd import rdp_cols_dgrad, rdp_rows_dgrad
 from repro.kernels.tdp_matmul_bwd import tdp_dgrad, tdp_wgrad
+from repro.obs import RecompileWatchdog
 
 jax.config.update("jax_enable_x64", False)
 
@@ -181,9 +182,9 @@ def test_backward_kernels_do_not_recompile_across_biases():
         return jax.grad(loss, (0, 1))(a, w)
 
     g0 = grads(0)
-    sizes = (rdp_cols_dgrad._cache_size(),)
+    wd = RecompileWatchdog().watch_jit(rdp_cols_dgrad, "rdp_cols_dgrad")
     outs = [g0] + [grads(bias) for bias in range(1, dp)]
-    assert rdp_cols_dgrad._cache_size() == sizes[0], "dgrad recompiled"
+    wd.assert_clean()   # dgrad must not recompile across biases
     # biases produce mathematically distinct weight grads
     for i in range(dp):
         for j in range(i + 1, dp):
@@ -204,11 +205,12 @@ def test_tdp_backward_kernels_do_not_recompile_across_biases():
         return jax.grad(loss, (0, 1))(a, w)
 
     grads(0)
-    size_d, size_w = tdp_dgrad._cache_size(), tdp_wgrad._cache_size()
+    wd = (RecompileWatchdog()
+          .watch_jit(tdp_dgrad, "tdp_dgrad")
+          .watch_jit(tdp_wgrad, "tdp_wgrad"))
     for bias in range(1, dp):
         grads(bias)
-    assert tdp_dgrad._cache_size() == size_d, "tdp dgrad recompiled"
-    assert tdp_wgrad._cache_size() == size_w, "tdp wgrad recompiled"
+    wd.assert_clean()
 
 
 def test_rows_dgrad_does_not_recompile_across_biases():
@@ -224,9 +226,9 @@ def test_rows_dgrad_does_not_recompile_across_biases():
         return jax.grad(loss, (0, 1))(ac, w)
 
     grads(0)
-    size = rdp_rows_dgrad._cache_size()
+    wd = RecompileWatchdog().watch_jit(rdp_rows_dgrad, "rdp_rows_dgrad")
     grads(1)
-    assert rdp_rows_dgrad._cache_size() == size, "rows dgrad recompiled"
+    wd.assert_clean()
 
 
 # --------------------------------------------------------------------------
@@ -335,13 +337,13 @@ def test_no_family_backend_recompiles_across_biases():
 
     for fam_name in pallas_fams:
         run(fam_name, 0)                         # warm every kernel at dp
-    sizes = {nm: fn._cache_size() for nm, fn in caches.items()}
+    wd = RecompileWatchdog()
+    for nm, fn in caches.items():
+        wd.watch_jit(fn, nm)
     for fam_name in pallas_fams:
         for bias in range(1, dp):
             run(fam_name, bias)
-    for nm, fn in caches.items():
-        assert fn._cache_size() == sizes[nm], \
-            f"{nm} recompiled across biases (bias must stay traced)"
+    wd.assert_clean()   # bias must stay traced: no cache may grow
 
 
 # --------------------------------------------------------------------------

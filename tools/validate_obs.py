@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""Validate observability artifacts from a --trace/--metrics-out run.
+
+    python tools/validate_obs.py --trace trace.jsonl \
+        --metrics metrics.jsonl [--schema tools/obs_metrics.schema.json]
+
+Trace files are checked line-by-line against the Chrome Trace Event Format
+(the subset ``repro.obs.trace`` emits: complete "X", instant "i", counter
+"C" events; the unclosed-array form the spec explicitly allows).  Metrics
+snapshots are checked per line against the checked-in JSON schema.  Exit
+code 0 = both valid; diagnostics name the first offending line.  The CI
+obs smoke step runs this on every push.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import jsonschema
+
+_PHASES = {"X", "i", "C"}
+
+
+def validate_trace(path: str) -> int:
+    """Validate a Chrome-trace JSONL file; returns the event count.
+
+    Raises ValueError naming the offending line on the first violation.
+    """
+    lines = Path(path).read_text().splitlines()
+    if not lines or lines[0].strip() != "[":
+        raise ValueError(f"{path}:1: expected the trace to open with '['")
+    n = 0
+    for i, line in enumerate(lines[1:], start=2):
+        line = line.strip().rstrip(",")
+        if not line or line == "]":
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{path}:{i}: not valid JSON: {e}") from e
+        for key, typ in (("name", str), ("ph", str), ("pid", int),
+                         ("tid", int)):
+            if not isinstance(ev.get(key), typ):
+                raise ValueError(
+                    f"{path}:{i}: event missing/invalid {key!r}: {ev}")
+        if not isinstance(ev.get("ts"), (int, float)):
+            raise ValueError(f"{path}:{i}: event missing numeric 'ts'")
+        if ev["ph"] not in _PHASES:
+            raise ValueError(
+                f"{path}:{i}: unknown phase {ev['ph']!r} "
+                f"(emitter produces {sorted(_PHASES)})")
+        if ev["ph"] == "X" and not (isinstance(ev.get("dur"), (int, float))
+                                    and ev["dur"] >= 0):
+            raise ValueError(
+                f"{path}:{i}: complete event needs a nonnegative 'dur'")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            raise ValueError(f"{path}:{i}: 'args' must be an object")
+        n += 1
+    if n == 0:
+        raise ValueError(f"{path}: trace contains no events")
+    return n
+
+
+def validate_metrics(path: str, schema_path: str) -> int:
+    """Validate a metrics JSONL snapshot; returns the record count."""
+    schema = json.loads(Path(schema_path).read_text())
+    validator = jsonschema.Draft202012Validator(schema)
+    n = 0
+    for i, line in enumerate(Path(path).read_text().splitlines(), start=1):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"{path}:{i}: not valid JSON: {e}") from e
+        errors = sorted(validator.iter_errors(rec), key=str)
+        if errors:
+            raise ValueError(f"{path}:{i}: {errors[0].message} in {rec}")
+        n += 1
+    if n == 0:
+        raise ValueError(f"{path}: metrics snapshot is empty")
+    return n
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/validate_obs.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--trace", default=None,
+                    help="trace JSONL from --trace")
+    ap.add_argument("--metrics", default=None,
+                    help="metrics JSONL from --metrics-out")
+    ap.add_argument("--schema",
+                    default=str(Path(__file__).parent
+                                / "obs_metrics.schema.json"))
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("nothing to validate: pass --trace and/or --metrics")
+    try:
+        if args.trace:
+            n = validate_trace(args.trace)
+            print(f"{args.trace}: OK ({n} trace events)")
+        if args.metrics:
+            n = validate_metrics(args.metrics, args.schema)
+            print(f"{args.metrics}: OK ({n} metric records)")
+    except (ValueError, OSError) as e:
+        print(f"INVALID: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
