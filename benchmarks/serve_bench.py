@@ -1,15 +1,23 @@
 """Serving benchmark: Poisson arrivals through the continuous-batching
 runtime, emitting ``BENCH_serve.json`` (TTFT / TPOT / queue delay /
-throughput + pattern-bucket accounting).
+throughput + pattern-bucket, paged-KV and router accounting).
 
 Runs end-to-end on CPU: the MC-dropout ensemble members with ``dp > 1``
 execute their FFNs through the compact RDP Pallas kernels in interpret
 mode (``DropoutPlan(backend="pallas")``), so the benchmark exercises the exact
 serving-time kernel path the paper's technique accelerates.
 
+By default the runtime is the paged KV cache with copy-on-write
+shared-prefill ensembles (DESIGN.md §13); ``--legacy`` restores the
+pre-paged slot pool with per-member prefill, and ``--compare-legacy`` runs
+BOTH on the same trace and records the queue-delay improvement in the
+output (the acceptance-criterion artifact).  ``--replicas K`` puts the
+bucket-affinity Router in front of K engine replicas.
+
 Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--arch qwen2-1-5b]
       [--n-requests 12] [--rate 20] [--capacity 4] [--ensemble 4]
-      [--ensemble-prob 0.5] [--out BENCH_serve.json]
+      [--replicas 1] [--compare-legacy] [--metrics-out serve_metrics.jsonl]
+      [--out BENCH_serve.json]
 """
 import argparse
 import time
@@ -27,6 +35,56 @@ except ImportError:                      # run as a script, not a module
     from common import bench_record, write_json
 
 
+def _build_runtime(args, cfg, params, plan, legacy: bool):
+    kw = dict(capacity=args.capacity, max_len=args.max_len,
+              prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
+              plan=plan, paged=not legacy, shared_prefill=not legacy,
+              page_size=args.page_size)
+    # the legacy reference is the pre-paged runtime as it shipped:
+    # one scheduler, slot pool, per-member prefill — no router
+    if args.replicas > 1 and not legacy:
+        return serve.Router(cfg, params, replicas=args.replicas, **kw)
+    return serve.Scheduler(cfg, params, **kw)
+
+
+def _chunk_lens(trace, chunk: int) -> tuple:
+    """Distinct prefill-chunk lengths the trace will execute."""
+    lens = set()
+    for req in trace:
+        s = len(req.prompt)
+        while s > 0:
+            take = min(chunk, s)
+            lens.add(take)
+            s -= take
+    return tuple(sorted(lens))
+
+
+def _run_once(args, cfg, params, plan, legacy: bool) -> tuple:
+    runtime = _build_runtime(args, cfg, params, plan, legacy)
+    trace = serve.poisson_trace(
+        rate=args.rate, n_requests=args.n_requests, seed=args.seed,
+        prompt_len=(args.prompt_min, args.prompt_max),
+        max_new=(args.gen_min, args.gen_max), vocab=cfg.vocab,
+        ensemble=args.ensemble, ensemble_prob=args.ensemble_prob)
+
+    if args.warmup:
+        # AOT-compile the executable universe (applied to BOTH runtimes,
+        # so the legacy comparison is warm-vs-warm), then reset telemetry:
+        # the measured run sees steady-state serving, not XLA compiles
+        n = runtime.warmup(
+            chunk_lens=_chunk_lens(trace, args.prefill_chunk))
+        print(f"warmup: compiled {n} executables "
+              f"({'legacy' if legacy else 'paged'})")
+        runtime.reset_telemetry()
+
+    # WallClock: latency histograms measure real compute (with --warmup
+    # the first-call XLA compiles are excluded; without it they are in)
+    t0 = time.perf_counter()
+    out = serve.Server(runtime, clock=serve.WallClock()).run(trace)
+    wall = time.perf_counter() - t0
+    return out, wall, runtime
+
+
 def run_bench(args) -> dict:
     cfg = get_smoke(normalize(args.arch))
     params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
@@ -36,23 +94,11 @@ def run_bench(args) -> dict:
         dp_max=args.dp_max, block=cfg.d_ff // cfg.pattern_nb,
         backend=args.impl, seed=args.seed)
 
-    scheduler = serve.Scheduler(
-        cfg, params, capacity=args.capacity, max_len=args.max_len,
-        prefill_chunk=args.prefill_chunk, max_queue=args.max_queue,
-        plan=plan)
-    trace = serve.poisson_trace(
-        rate=args.rate, n_requests=args.n_requests, seed=args.seed,
-        prompt_len=(args.prompt_min, args.prompt_max),
-        max_new=(args.gen_min, args.gen_max), vocab=cfg.vocab,
-        ensemble=args.ensemble, ensemble_prob=args.ensemble_prob)
-
-    # WallClock: latency histograms measure real compute (incl. the
-    # first-call compiles — report steady-state separately if needed)
-    t0 = time.perf_counter()
-    out = serve.Server(scheduler, clock=serve.WallClock()).run(trace)
-    wall = time.perf_counter() - t0
-
+    out, wall, runtime = _run_once(args, cfg, params, plan,
+                                   legacy=args.legacy)
     telemetry = out["telemetry"]
+    sched0 = runtime.replicas[0] if args.replicas > 1 else runtime
+
     ensembles = {}
     for rid, members in sorted(out["results"].items()):
         if len(members) > 1:
@@ -63,7 +109,8 @@ def run_bench(args) -> dict:
                 "disagreement": agg["disagreement"],
                 "mean_ffn_flop_fraction": agg["mean_ffn_flop_fraction"],
             }
-    return bench_record(
+
+    record = bench_record(
         "serve", arch=normalize(args.arch),
         config={
             "n_requests": args.n_requests, "rate_req_s": args.rate,
@@ -72,12 +119,44 @@ def run_bench(args) -> dict:
             "ensemble_prob": args.ensemble_prob,
             "drop_rate": args.drop_rate, "dp_max": args.dp_max,
             "pattern_impl": args.impl, "seed": args.seed,
+            "replicas": args.replicas, "warmup": args.warmup,
+            "kv": "slot-legacy" if args.legacy else "paged",
+            "shared_prefill": not args.legacy,
+            "page_size": sched0.page_size,
+            "num_pages": sched0.num_pages,
             "schedule_support_dp": plan.support(),
-            "plan_buckets": scheduler.possible_buckets(),
+            "plan_buckets": sched0.possible_buckets(),
         },
         wall_s=wall,
         telemetry=telemetry,
         ensembles=ensembles)
+
+    if args.compare_legacy and not args.legacy:
+        # the reference is the pre-paged serving stack exactly as it
+        # shipped: slot pool, per-member prefill, one replica, and no
+        # warmup (Scheduler.warmup is part of the new subsystem) — the
+        # same methodology that produced the previous BENCH_serve.json
+        legacy_args = argparse.Namespace(**{**vars(args), "warmup": False})
+        legacy_out, legacy_wall, _ = _run_once(legacy_args, cfg, params,
+                                               plan, legacy=True)
+        lt = legacy_out["telemetry"]
+        record["legacy_baseline"] = {
+            "kv": "slot-legacy", "replicas": 1, "warmup": False,
+            "wall_s": legacy_wall,
+            "queue_delay_mean_s": lt["queue_delay"]["mean"],
+            "ttft_p95_s": lt["ttft"]["p95"],
+            "prompt_tokens": lt["prompt_tokens"],
+        }
+        base = lt["queue_delay"]["mean"]
+        ours = telemetry["queue_delay"]["mean"]
+        record["queue_delay_improvement"] = \
+            base / ours if ours > 0 else float("inf")
+
+    if args.metrics_out:
+        tel = runtime.telemetry
+        with open(args.metrics_out, "w") as f:
+            f.write(tel.registry.to_jsonl())
+    return record
 
 
 def main():
@@ -99,27 +178,54 @@ def main():
     ap.add_argument("--dp-max", type=int, default=4)
     ap.add_argument("--impl", default="pallas", choices=["pallas", "slice"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the bucket-affinity router")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile the executable universe first and "
+                         "measure steady-state serving (no XLA compiles)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV page size in tokens (default: auto)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="pre-paged runtime: slot pool, per-member prefill")
+    ap.add_argument("--compare-legacy", action="store_true",
+                    help="also run the legacy runtime on the same trace and "
+                         "record the queue-delay improvement")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry JSONL snapshot here")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
 
     result = run_bench(args)
     t = result["telemetry"]
     print(f"arch={result['arch']} backend={result['backend']} "
+          f"kv={result['config']['kv']} replicas={args.replicas} "
           f"wall={result['wall_s']:.1f}s")
     print(f"completed {t['requests_completed']}/{args.n_requests} requests "
           f"({t['members_completed']} members), "
-          f"rejected {t['requests_rejected']}")
+          f"rejected {t['requests_rejected']}, shed {t['requests_shed']}")
     print(f"tokens: {t['tokens_generated']} generated / "
-          f"{t['prompt_tokens']} prompt; "
+          f"{t['prompt_tokens']} prompt "
+          f"({t['prompt_tokens_members']} member-equivalent, "
+          f"shared ratio {t['prefill_shared_ratio']:.2f}); "
           f"throughput {t.get('throughput_tok_s', 0):.1f} tok/s")
     print(f"TTFT p50/p95: {t['ttft']['p50'] * 1e3:.1f}/"
           f"{t['ttft']['p95'] * 1e3:.1f} ms | "
           f"TPOT p50/p95: {t['tpot']['p50'] * 1e3:.1f}/"
           f"{t['tpot']['p95'] * 1e3:.1f} ms")
-    print(f"queue delay p50: {t['queue_delay']['p50'] * 1e3:.1f} ms")
+    print(f"queue delay mean/p50: {t['queue_delay']['mean'] * 1e3:.1f}/"
+          f"{t['queue_delay']['p50'] * 1e3:.1f} ms")
+    print(f"kv: forks={t['cow_forks']} cow_copies={t['cow_copies']} "
+          f"pools={t['kv_pages']}")
+    print(f"compile cache: {t['compile_cache_hits']}")
     print(f"pattern buckets (tokens): {t['bucket_tokens']}")
     print(f"mean FFN FLOP fraction vs dense: "
           f"{t['mean_ffn_flop_fraction']:.3f}")
+    if "queue_delay_improvement" in result:
+        print(f"queue-delay improvement vs legacy: "
+              f"{result['queue_delay_improvement']:.1f}x "
+              f"(legacy mean "
+              f"{result['legacy_baseline']['queue_delay_mean_s'] * 1e3:.1f}"
+              f" ms)")
     write_json(args.out, result)
 
 

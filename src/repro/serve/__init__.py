@@ -1,10 +1,14 @@
-"""Serving: engine (prefill/decode + caches) and the continuous-batching
-runtime (scheduler, cache pool, telemetry, server driver) — DESIGN.md §7."""
+"""Serving: engine (prefill/decode + caches), the paged KV cache with
+copy-on-write forks (``kv``), and the continuous-batching runtime
+(scheduler, router, telemetry, server driver) — DESIGN.md §7, §13."""
+from . import kv
 from .engine import (decode_step, decode_step_ragged, prefill,
                      prefill_extend, init_cache, decode_groups,
-                     supports_chunked_prefill)
+                     supports_chunked_prefill, supports_paged_kv, fork_kv)
 from .cache_pool import CachePool, CachePoolError
+from .kv import BlockTable, PagedKVStore, PageError, PagePool
 from .metrics import Histogram, Telemetry
+from .router import Router
 from .scheduler import Request, Scheduler, Sequence
 from .server import (Server, StepCostModel, VirtualClock, WallClock,
                      aggregate_ensemble, poisson_trace)
@@ -12,8 +16,10 @@ from .server import (Server, StepCostModel, VirtualClock, WallClock,
 __all__ = [
     "decode_step", "decode_step_ragged", "prefill", "prefill_extend",
     "init_cache", "decode_groups", "supports_chunked_prefill",
+    "supports_paged_kv", "fork_kv", "kv",
+    "BlockTable", "PagedKVStore", "PageError", "PagePool",
     "CachePool", "CachePoolError", "Histogram", "Telemetry",
-    "Request", "Scheduler", "Sequence",
+    "Request", "Scheduler", "Sequence", "Router",
     "Server", "StepCostModel", "VirtualClock", "WallClock",
     "aggregate_ensemble", "poisson_trace",
 ]

@@ -1,86 +1,84 @@
-"""Slot-based cache pool for the continuous-batching runtime (DESIGN.md §7).
+"""DEPRECATED slot pool — a shim over the paged KV allocator (DESIGN.md §13).
 
-A fixed-capacity pool of per-sequence cache slots.  Admitting a request
-*allocates* a slot, finishing it *frees* the slot — the pool never builds a
-new cache pytree per request.  Because JAX arrays are immutable, "reuse"
-means two concrete things here:
+``CachePool`` predates the paged KV cache: a fixed pool of whole-``max_len``
+cache slots, one per sequence.  It now delegates all bookkeeping to a
+``kv.PagePool`` at *single-page granularity* (one page == one slot of
+``max_len`` positions), keeping the historical API and invariants —
+LIFO slot recycling, zero-template reset on free, ``CachePoolError`` on
+double free / use-after-free / foreign slots — while the real allocator
+lives in ``serve/kv/pages.py``.
 
-* the zeroed cache template (``engine.init_cache(cfg, 1, max_len)``) is
-  materialized ONCE; every idle slot aliases those same zero buffers, and
-  ``free`` re-aliases them (device memory for idle slots is the template's,
-  not per-slot copies);
-* the host-side structure (decode-group layout, pytree construction) is
-  built once instead of per request.
-
-Freeing resets the slot to the template — mandatory for correctness, not
-hygiene: SSM conv/state and ring-buffer slots are NOT masked by ``pos`` the
-way linear attention caches are, so a recycled slot must start from zeros.
+New code should use ``kv.PagedKVStore`` (fixed-size pages, refcounted CoW
+forks, admission reservations).  The scheduler itself only uses this slot
+mode for archs whose caches have no pageable sequence axis (SSM state,
+ring buffers, modality frontends); constructing ``CachePool`` directly
+emits a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
 from repro.models.transformer import ModelConfig
 
 from . import engine
+from .kv.pages import PageError, PagePool, PageStats
+
+# the historical stats type: PageStats carries the same four fields
+# (allocated / freed / failed / high_water) plus the paged extras
+PoolStats = PageStats
 
 
 class CachePoolError(RuntimeError):
     """Invariant violation: double free, foreign slot, use-after-free."""
 
 
-@dataclasses.dataclass
-class PoolStats:
-    allocated: int = 0      # total successful allocate() calls
-    freed: int = 0
-    failed: int = 0         # allocate() calls that found the pool exhausted
-    high_water: int = 0     # max slots simultaneously in use
-
-
 class CachePool:
-    """Fixed pool of single-sequence KV/SSM cache slots."""
+    """Fixed pool of single-sequence cache slots (deprecated shim)."""
 
-    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int):
+    def __init__(self, cfg: ModelConfig, capacity: int, max_len: int,
+                 warn: bool = True):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if warn:
+            warnings.warn(
+                "CachePool is deprecated: use serve.kv.PagedKVStore "
+                "(paged KV with copy-on-write forks); CachePool is now a "
+                "single-page-granularity shim over the same allocator",
+                DeprecationWarning, stacklevel=2)
         self.cfg = cfg
         self.capacity = capacity
         self.max_len = max_len
         self._template = engine.init_cache(cfg, 1, max_len)[0]
         self._caches = [self._template] * capacity
-        self._in_use = [False] * capacity
-        # LIFO free list: the most recently freed slot is reused first
-        # (its buffers are the warmest)
-        self._free = list(range(capacity - 1, -1, -1))
-        self.stats = PoolStats()
+        # one page per slot: PagePool provides the LIFO free list, the
+        # alloc/free accounting and the use-after-free checks
+        self._pool = PagePool(num_pages=capacity, page_size=max_len)
+
+    @property
+    def stats(self) -> PoolStats:
+        return self._pool.stats
 
     # ------------------------------------------------------------------
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        return self._pool.free_count
 
     @property
     def in_use_count(self) -> int:
-        return self.capacity - len(self._free)
+        return self._pool.in_use_count
 
     def allocate(self) -> int | None:
         """Claim a slot (reset to the zero template); None when exhausted."""
-        if not self._free:
-            self.stats.failed += 1
+        slot = self._pool.alloc_page()
+        if slot is None:
             return None
-        slot = self._free.pop()
-        self._in_use[slot] = True
         self._caches[slot] = self._template
-        self.stats.allocated += 1
-        self.stats.high_water = max(self.stats.high_water, self.in_use_count)
         return slot
 
     def free(self, slot: int) -> None:
         self._check(slot)
-        self._in_use[slot] = False
+        self._pool.decref(slot)
         self._caches[slot] = self._template
-        self._free.append(slot)
-        self.stats.freed += 1
 
     def read(self, slot: int):
         self._check(slot)
@@ -91,9 +89,10 @@ class CachePool:
         self._caches[slot] = cache
 
     def _check(self, slot: int) -> None:
-        if not 0 <= slot < self.capacity:
-            raise CachePoolError(f"slot {slot} outside pool of "
-                                 f"{self.capacity}")
-        if not self._in_use[slot]:
+        try:
+            live = self._pool.is_live(slot)
+        except PageError as e:
+            raise CachePoolError(str(e)) from None
+        if not live:
             raise CachePoolError(f"slot {slot} is not allocated "
                                  f"(double free / use-after-free)")

@@ -575,6 +575,66 @@ def supports_chunked_prefill(cfg: ModelConfig) -> bool:
             and not cfg.vision_tokens)
 
 
+# --------------------------------------------------------------------------
+# paged KV primitives: block-table reads, span write-back, CoW fork
+# --------------------------------------------------------------------------
+#
+# Every cache leaf of the paged archs carries the sequence dimension at
+# axis 2 — attention k/v are [n_layers, B, C, KH, HD]; MLA ckv/krope are
+# [n_layers, B, C, lora|rope].  Pages partition that axis into fixed-size
+# chunks, so a page fragment is just ``init_cache(cfg, 1, page_size)``'s
+# layers, and the three tree ops below are all the storage layer needs.
+# Ring buffers (slot = pos % C), SSM state (no seq axis) and modality
+# frontends are not pageable — ``supports_paged_kv`` gates them out and
+# the scheduler falls back to slot pooling there.
+
+PAGED_SEQ_AXIS = 2
+
+
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """Whether every cache group of ``cfg`` has a pageable seq axis."""
+    return (cfg.sliding_window is None and cfg.family in ("dense", "moe")
+            and not cfg.n_codebooks and not cfg.vision_tokens)
+
+
+def page_slice(layers, lo: int, hi: int, axis: int = PAGED_SEQ_AXIS):
+    """Slice sequence positions ``[lo, hi)`` out of a cache ``layers`` tree."""
+    return jax.tree.map(
+        lambda a: jax.lax.slice_in_dim(a, lo, hi, axis=axis), layers)
+
+
+def page_update(frag, chunk, off: int, axis: int = PAGED_SEQ_AXIS):
+    """Write ``chunk`` into fragment ``frag`` at position offset ``off``."""
+    return jax.tree.map(
+        lambda f, c: jax.lax.dynamic_update_slice_in_dim(
+            f, c.astype(f.dtype), off, axis=axis), frag, chunk)
+
+
+def page_join(frags, axis: int = PAGED_SEQ_AXIS):
+    """Concatenate page fragments back into the dense cache layout.
+
+    This is the paged *read*: a block table's fragments, gathered in
+    logical order (plus zero-template padding), reproduce exactly the
+    ``[.., max_len, ..]`` layout the per-bucket decode/prefill executables
+    were compiled for — the gather lives host-side so paging never grows
+    the executable universe beyond ``plan.buckets()``."""
+    if len(frags) == 1:
+        return frags[0]
+    return jax.tree.map(lambda *a: jnp.concatenate(a, axis=axis), *frags)
+
+
+def fork_kv(cache):
+    """Fork a prefilled cache for an ensemble member, O(1).
+
+    JAX arrays are immutable, so the fork aliases every leaf: N members
+    share the prefill's device buffers until their own decode writes
+    produce diverged arrays.  This is the slot-pool fallback for archs
+    without a pageable seq axis; the paged path gets the same semantics
+    with page granularity via ``kv.PagedKVStore.fork`` + copy-on-write
+    ``absorb``."""
+    return jax.tree.map(lambda a: a, cache)
+
+
 def _chunk_attention(q, k_cache, v_cache, pos0):
     """Causal attention of a chunk of queries at positions [pos0, pos0+Sc)
     over the full cache (keys already written at their positions).

@@ -1,0 +1,24 @@
+"""Paged KV cache: block-table allocator + copy-on-write fork (DESIGN.md §13).
+
+Two layers, separately testable:
+
+* ``pages``  — ``PagePool``: a pure allocator over fixed-size pages with
+  refcounts, per-sequence ``BlockTable``s, admission reservations and
+  leak-proof alloc/free/fork invariants.  No arrays — hypothesis property
+  tests hammer it directly.
+* ``store``  — ``PagedKVStore``: KV fragments (one cache pytree slice per
+  page) on top of the pool, with ``materialize`` (block-table gather into
+  the dense cache layout the engine executables expect) and ``absorb``
+  (write-back of a dirty span, privatizing shared pages copy-on-write).
+
+The shared-prefill ensemble story: a request is prefilled ONCE into one
+block table; ``fork`` hands every MC-dropout ensemble member a refcounted
+view of those pages; a member copies a page only when it first writes into
+it during decode (its private tail), so N members cost one prefill and one
+set of prompt pages instead of N.
+"""
+from .pages import BlockTable, PageError, PagePool, PageStats
+from .store import PagedKVStore
+
+__all__ = ["BlockTable", "PageError", "PagePool", "PageStats",
+           "PagedKVStore"]

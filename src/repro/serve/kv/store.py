@@ -1,0 +1,147 @@
+"""Paged KV storage: cache fragments per page, gather/write-back, CoW.
+
+A *fragment* is the model's per-sequence cache pytree restricted to one
+page's worth of sequence positions (``engine.init_cache(cfg, 1, page_size)``
+layers).  Physical page *i* owns ``_frags[i]``; a sequence's logical cache
+is its block table's fragments in order.
+
+Two facts make this cheap under JAX:
+
+* **materialize** concatenates the table's fragments (plus zero-template
+  padding) back into the fixed ``max_len`` dense layout, so the engine's
+  per-bucket executables never see a shape change — the executable universe
+  stays exactly one per ``(dp, bias)`` bucket (DESIGN.md §13 explains why
+  the gather lives host-side instead of inside the kernel);
+* **absorb** writes a dirty span back into only the pages it touches.
+  Because JAX arrays are immutable, the copy-on-write "copy" is refcount
+  bookkeeping plus an alias — the physical duplication happens lazily as
+  the ``dynamic_update_slice`` that writes the new tokens, and untouched
+  shared pages are never duplicated at all.
+
+Free pages alias one zero template fragment (the ``CachePool`` trick), so
+idle pool memory is the template's, not per-page copies.
+"""
+from __future__ import annotations
+
+from typing import Hashable, Optional
+
+import jax.numpy as jnp
+
+from .pages import BlockTable, PageError, PagePool, PageStats
+
+
+class PagedKVStore:
+    """Block-table-addressed KV fragments over a refcounted ``PagePool``."""
+
+    def __init__(self, template_layers, *, page_size: int, num_pages: int,
+                 max_len: int, seq_axis: int = 2):
+        if max_len % page_size != 0:
+            raise ValueError(f"max_len {max_len} must be a multiple of "
+                             f"page_size {page_size}")
+        self.pool = PagePool(num_pages, page_size)
+        self.page_size = page_size
+        self.max_len = max_len
+        self.max_pages = max_len // page_size
+        self.seq_axis = seq_axis
+        self._template = template_layers
+        self._frags = [template_layers] * num_pages
+
+    @classmethod
+    def for_model(cls, cfg, *, page_size: int, num_pages: int,
+                  max_len: int) -> "PagedKVStore":
+        """Build a store whose fragments match ``cfg``'s cache layout."""
+        from .. import engine
+        if not engine.supports_paged_kv(cfg):
+            raise ValueError(
+                f"{cfg.name}: arch does not support paged KV (ring-buffer, "
+                f"SSM-state or modality caches have no pageable seq axis)")
+        template = engine.init_cache(cfg, 1, page_size)[0]["layers"]
+        return cls(template, page_size=page_size, num_pages=num_pages,
+                   max_len=max_len)
+
+    # ---- passthrough -------------------------------------------------------
+    @property
+    def stats(self) -> PageStats:
+        return self.pool.stats
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` sequence positions."""
+        if n_tokens <= 0:
+            return 0
+        return -(-n_tokens // self.page_size)
+
+    # ---- lifecycle ---------------------------------------------------------
+    def alloc(self, n_tokens: int,
+              owner: Hashable = None) -> Optional[BlockTable]:
+        """Table covering ``n_tokens`` positions; None when pool is full."""
+        return self.pool.alloc_table(self.pages_for(n_tokens), owner)
+
+    def fork(self, bt: BlockTable) -> BlockTable:
+        """Share ``bt``'s pages with a new table (the CoW fork primitive)."""
+        return self.pool.fork(bt)
+
+    def free(self, bt: BlockTable) -> None:
+        """Release a table; physically freed pages re-alias the template."""
+        for pid in self.pool.free_table(bt):
+            self._frags[pid] = self._template
+
+    # ---- gather (paged read) / write-back ----------------------------------
+    def materialize_layers(self, bt: BlockTable):
+        """Gather ``bt``'s fragments into the dense ``max_len`` layout."""
+        from .. import engine
+        frags = [self._frags[pid] for pid in bt.pages]
+        frags += [self._template] * (self.max_pages - len(frags))
+        return engine.page_join(frags, axis=self.seq_axis)
+
+    def materialize(self, bt: BlockTable, pos: int) -> dict:
+        """Full cache dict for the engine entry points."""
+        return {"layers": self.materialize_layers(bt),
+                "pos": jnp.asarray(pos, jnp.int32)}
+
+    def absorb(self, bt: BlockTable, layers, lo: int, hi: int,
+               owner: Hashable = None) -> int:
+        """Write positions ``[lo, hi)`` of a dense cache back into pages.
+
+        Shared pages in the span are privatized copy-on-write; positions
+        past the table's end extend it with fresh pages (drawing on
+        ``owner``'s admission reservation).  Returns the number of pages
+        newly allocated (CoW copies + extensions).
+        """
+        if hi <= lo:
+            return 0
+        if hi > self.max_len:
+            raise PageError(f"absorb span [{lo}, {hi}) exceeds max_len "
+                            f"{self.max_len}")
+        from .. import engine
+        ps = self.page_size
+        new_pages = 0
+        for p in range(lo // ps, -(-hi // ps)):
+            if p > len(bt.pages):
+                raise PageError(f"absorb would leave a hole: page {p} "
+                                f"beyond table of {len(bt.pages)}")
+            if p == len(bt.pages):
+                if not self.pool.extend(bt, owner):
+                    raise PageError(
+                        "pool exhausted extending a block table — admission "
+                        "should have reserved this page")
+                new_pages += 1
+            _, copied = self.pool.make_private(
+                bt, p, owner=owner, on_copy=self._alias_frag)
+            new_pages += copied
+            pid = bt.pages[p]
+            span_lo, span_hi = max(lo, p * ps), min(hi, (p + 1) * ps)
+            chunk = engine.page_slice(layers, span_lo, span_hi,
+                                      axis=self.seq_axis)
+            self._frags[pid] = engine.page_update(
+                self._frags[pid], chunk, span_lo - p * ps,
+                axis=self.seq_axis)
+        return new_pages
+
+    def _alias_frag(self, old: int, new: int) -> None:
+        # immutability makes the CoW copy an alias; the subsequent
+        # page_update builds the diverged buffer
+        self._frags[new] = self._frags[old]
+
+    # ---- invariants --------------------------------------------------------
+    def assert_balanced(self, tables: list[BlockTable]) -> None:
+        self.pool.assert_balanced(tables)

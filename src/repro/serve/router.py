@@ -1,0 +1,162 @@
+"""Multi-replica front-end: bucket-affinity routing over K engine replicas.
+
+Each logical replica is a full ``Scheduler`` — its own page pool, its own
+compiled-executable cache, its own recompile watchdog — while telemetry
+aggregates through ONE shared ``MetricsRegistry`` so a run produces a
+single snapshot (per-replica detail lives in ``replica``-labeled series:
+page-pool occupancy gauges, compile-cache hit/miss counters).
+
+Routing policy (DESIGN.md §13): a request's ensemble members decode under
+pattern buckets ``(dp, b)`` drawn deterministically from (seed, member).
+The router scores each replica by how many of those buckets it has already
+compiled a decode executable for (**warm affinity**) and routes to the
+best-scoring replica, tie-broken by least load (active + queued members),
+then by replica index.  A request whose buckets are warm nowhere lands on
+the least-loaded replica and warms it — over a steady workload the bucket
+universe partitions across replicas instead of every replica compiling
+every bucket.
+
+The router deliberately submits to ONE replica: a second-chance submit to
+another replica on rejection would double-count admission-control
+decisions in the shared telemetry and erode affinity.  Shedding/rejection
+stay per-replica decisions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.models.transformer import ModelConfig
+from repro.obs import Observability
+from repro.obs.recompile import RecompileWatchdog
+from repro.obs.registry import MetricsRegistry
+from repro.obs.trace import SpanTracer
+
+from .metrics import Telemetry
+from .scheduler import Request, Scheduler
+
+
+class Router:
+    """K logical engine replicas behind one submit/step front-end.
+
+    Duck-types the scheduler interface ``Server`` drives (``submit`` /
+    ``step`` / ``has_work`` / ``completed`` / ``telemetry``), so
+    ``Server(Router(...))`` works unchanged.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, replicas: int = 2,
+                 registry: Optional[MetricsRegistry] = None,
+                 **sched_kwargs):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        registry = registry if registry is not None else MetricsRegistry()
+        self.registry = registry
+        self.telemetry = Telemetry(registry=registry)
+        self.replicas: list[Scheduler] = []
+        for i in range(replicas):
+            # shared registry, per-replica watchdog: executable-universe
+            # violations must name the replica that compiled off-plan
+            obs = Observability(
+                registry=registry,
+                tracer=SpanTracer(path=None, enabled=False),
+                watchdog=RecompileWatchdog(registry=registry),
+                drift=None)
+            self.replicas.append(Scheduler(
+                cfg, params, obs=obs, telemetry=self.telemetry,
+                name=f"replica{i}", **sched_kwargs))
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+
+    def _request_buckets(self, req: Request) -> set:
+        sched = self.replicas[0]        # pattern sampling is replica-free
+        return {sched._pattern_for(req, m) for m in range(req.ensemble)}
+
+    def _warm_buckets(self, sched: Scheduler) -> set:
+        return {key[1] for key in sched._fns if key[0] == "decode"}
+
+    def _load(self, sched: Scheduler) -> int:
+        return sched.active_count + sched.queued_count
+
+    def route(self, req: Request) -> int:
+        """Pick the replica index for ``req`` (pure, no state change).
+
+        Score: warm-bucket overlap first, then least load, then fewest
+        warm buckets — so cold requests spread to the least-warmed replica
+        instead of piling onto (and polluting) a warm one; final tie goes
+        to the lowest index (deterministic)."""
+        want = self._request_buckets(req)
+        best, best_score = 0, None
+        for i, sched in enumerate(self.replicas):
+            warm = self._warm_buckets(sched)
+            score = (len(want & warm), -self._load(sched), -len(warm))
+            if best_score is None or score > best_score:
+                best, best_score = i, score
+        return best
+
+    def submit(self, req: Request, now: float = 0.0) -> bool:
+        idx = self.route(req)
+        sched = self.replicas[idx]
+        warm = bool(self._request_buckets(req) & self._warm_buckets(sched))
+        if warm:
+            self.telemetry.router_affinity_hits += 1
+        else:
+            self.telemetry.router_affinity_misses += 1
+        return sched.submit(req, now)
+
+    # ------------------------------------------------------------------
+    # scheduler duck-typing for Server
+    # ------------------------------------------------------------------
+
+    @property
+    def has_work(self) -> bool:
+        return any(s.has_work for s in self.replicas)
+
+    @property
+    def completed(self) -> dict:
+        out: dict = {}
+        for s in self.replicas:
+            out.update(s.completed)
+        return out
+
+    @property
+    def queued_count(self) -> int:
+        return sum(s.queued_count for s in self.replicas)
+
+    @property
+    def active_count(self) -> int:
+        return sum(s.active_count for s in self.replicas)
+
+    def step(self, now: float = 0.0, clock=None) -> dict:
+        """One iteration of every replica (round-robin within one call)."""
+        totals: dict = {}
+        for s in self.replicas:
+            if not s.has_work:
+                continue
+            r = s.step(now, clock)
+            for k, v in r.items():
+                totals[k] = totals.get(k, 0) + v
+        return totals
+
+    def warmup(self, decode_widths: tuple = (1, 2, 4, 8),
+               chunk_lens=None) -> int:
+        """AOT-compile every replica's executable universe (each replica
+        owns its own compile cache).  Returns total executables compiled."""
+        return sum(s.warmup(decode_widths=decode_widths,
+                            chunk_lens=chunk_lens)
+                   for s in self.replicas)
+
+    def reset_telemetry(self, telemetry: Optional[Telemetry] = None
+                        ) -> Telemetry:
+        """Fresh shared telemetry for the router and every replica."""
+        tel = telemetry if telemetry is not None else Telemetry()
+        self.telemetry = tel
+        self.registry = tel.registry
+        for s in self.replicas:
+            s.reset_telemetry(tel)
+        return tel
+
+    def assert_clean(self) -> None:
+        """Every replica's watchdog must be violation-free."""
+        for s in self.replicas:
+            s.obs.watchdog.assert_clean()

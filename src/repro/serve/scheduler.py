@@ -1,26 +1,41 @@
 """Continuous-batching scheduler with pattern-bucketed MC-dropout ensembles.
 
-The runtime core (DESIGN.md §7).  One ``step()`` is one scheduler iteration:
+The runtime core (DESIGN.md §7, §13).  One ``step()`` is one iteration:
 
-1. **admit** — pop queued sequences (priority, then FCFS) into free cache
-   slots from the ``CachePool``;
+1. **admit** — pop queued requests (priority, then FCFS) once the paged KV
+   pool can *reserve* their worst-case page need (``kv.PagePool`` makes the
+   reservation binding, so an admitted request never hits an allocation
+   failure mid-flight — deadlock-free admission);
 2. **prefill** — advance ONE pending prefill by at most ``prefill_chunk``
-   prompt tokens (``engine.prefill_extend``), so a long prompt never blocks
-   the decode batch for more than a chunk (chunked prefill interleaving);
-   archs without chunked-prefill support prefill whole-prompt in one step;
+   prompt tokens, so a long prompt never blocks the decode batch for more
+   than a chunk; archs without chunked-prefill support prefill whole-prompt
+   in one step.  With ``shared_prefill`` (default) an ensemble request is
+   prefilled ONCE, densely, and the finished KV pages are **forked
+   copy-on-write** to all E members — prefill FLOPs are independent of E;
 3. **decode** — group all running sequences by their dropout-pattern bucket
-   ``(dp, b)`` and run one ``engine.decode_step_ragged`` per bucket.
-   Finished sequences are evicted and their slots freed at the end of the
-   same step (per-step join/evict).
+   ``(dp, b)`` and run one ``engine.decode_step_ragged`` per bucket,
+   absorbing each sequence's new KV back into its own pages (shared pages
+   privatize on first write).  Finished sequences are evicted and their
+   pages freed at the end of the same step.
 
 Paper tie-in: a request may ask for an MC-dropout ensemble of size E.  Each
 member samples a pattern ``(dp, b)`` from the scheduler's ``DropoutPlan``
 (deterministic in (request seed, member) — the same object the train loop
 samples from), and members sharing a bucket decode in the same batch
 through ONE compiled executable — ``dp``/``b`` are static, so bucketing is
-what keeps the executable count bounded (``plan.buckets()`` is the bucket
-universe) while members with ``dp > 1`` run their FFNs through the
-plan-selected backend at 1/dp FFN FLOPs.
+what keeps the executable count bounded while members with ``dp > 1`` run
+their FFNs through the plan-selected backend at 1/dp FFN FLOPs.  Paged
+reads gather block-table fragments back into the fixed ``max_len`` layout
+host-side, so paging never grows the executable universe.
+
+Shared-prefill semantics: the ensemble's prompt KV is computed once with
+the IDENTITY (dense) pattern.  Members in the dense bucket take the
+prefill's last-token logits directly — bitwise what a per-member dense
+prefill would have produced.  Members with ``dp > 1`` re-feed the last
+prompt token through their own bucket's decode step at position S-1, so
+only the last prompt position's KV is member-specific — the
+paper-consistent *approximate* trade: O(1) member-specific work instead of
+O(S).
 
 Everything is synchronous and deterministic: same (seed, arrival trace) →
 same admission order → same buckets → same greedy token streams.
@@ -43,6 +58,7 @@ from repro.models.transformer import ModelConfig
 
 from . import engine
 from .cache_pool import CachePool
+from .kv import BlockTable, PagedKVStore
 from repro.obs import Observability
 from .metrics import Telemetry
 
@@ -73,7 +89,9 @@ class Sequence:
     dp: int = 1
     bias: int = 0
     state: str = "queued"           # queued | prefill | running | done
-    slot: Optional[int] = None
+    slot: Optional[int] = None      # slot-mode cache slot
+    bt: Optional[BlockTable] = None  # paged-mode block table
+    owner: object = None            # reservation key for page draws
     prefill_done: int = 0           # prompt tokens already processed
     out_tokens: list = dataclasses.field(default_factory=list)
     first_logits: Optional[np.ndarray] = None   # logits of the first token
@@ -93,14 +111,34 @@ class Sequence:
 
     @property
     def pos(self) -> int:
-        """Host-side mirror of the slot cache's position: the prompt plus
-        every decoded token except the one about to be fed back.  Tracked
-        here so the decode hot path never blocks on a device scalar."""
+        """Host-side mirror of the cache position: the prompt plus every
+        decoded token except the one about to be fed back.  A forked member
+        that has not produced its first token yet sits at S-1 (it re-feeds
+        the last prompt token).  Tracked here so the decode hot path never
+        blocks on a device scalar."""
         return self.prompt_len + len(self.out_tokens) - 1
+
+    @property
+    def feed_token(self) -> int:
+        """Token to feed the next decode step."""
+        return (self.out_tokens[-1] if self.out_tokens
+                else int(self.req.prompt[-1]))
 
     @property
     def finished(self) -> bool:
         return len(self.out_tokens) >= self.req.max_new_tokens
+
+
+@dataclasses.dataclass
+class _Group:
+    """One admitted shared-prefill request: E members, one prefill."""
+
+    req: Request
+    members: list
+    page_need: int = 0              # worst-case pages reserved at admission
+    bt: Optional[BlockTable] = None  # paged prefill table (dense pattern)
+    prefill_done: int = 0
+    t_submit: float = 0.0
 
 
 def _next_pow2(n: int) -> int:
@@ -110,12 +148,20 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _default_page_size(max_len: int, want: int = 16) -> int:
+    """Largest divisor of ``max_len`` not exceeding ``want``."""
+    for ps in range(min(want, max_len), 0, -1):
+        if max_len % ps == 0:
+            return ps
+    return 1
+
+
 # --------------------------------------------------------------------------
 # scheduler
 # --------------------------------------------------------------------------
 
 class Scheduler:
-    """FCFS + priority continuous-batching scheduler over a cache pool."""
+    """FCFS + priority continuous-batching scheduler over a paged KV pool."""
 
     def __init__(self, cfg: ModelConfig, params, *, capacity: int = 8,
                  max_len: int = 128, prefill_chunk: int = 16,
@@ -126,7 +172,13 @@ class Scheduler:
                  eos_token: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None,
                  pad_buckets: bool = True,
-                 obs: Optional[Observability] = None):
+                 obs: Optional[Observability] = None,
+                 paged: Optional[bool] = None,
+                 shared_prefill: bool = True,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 max_queued_pages: Optional[int] = None,
+                 name: str = "replica0"):
         if cfg.n_codebooks or cfg.vision_tokens:
             raise ValueError(
                 f"{cfg.name}: modality-frontend archs (codebooks / vision) "
@@ -134,7 +186,7 @@ class Scheduler:
                 f"serve them through the engine API directly")
         self.cfg = cfg
         self.params = params
-        self.pool = CachePool(cfg, capacity, max_len)
+        self.name = name
         self._clock = None
         self.max_len = max_len
         self.prefill_chunk = prefill_chunk
@@ -156,40 +208,85 @@ class Scheduler:
         self.pattern_impl = plan.backend if plan is not None \
             else (pattern_impl or "pallas")
         self.eos_token = eos_token
+        self.shared_prefill = shared_prefill
+
+        # KV backend: paged where the arch has a pageable seq axis
+        # (block tables + CoW forks), slot pool otherwise.
+        self.paged = engine.supports_paged_kv(cfg) if paged is None else paged
+        if self.paged and not engine.supports_paged_kv(cfg):
+            raise ValueError(f"{cfg.name}: arch does not support paged KV")
+        if self.paged:
+            self.page_size = page_size if page_size is not None \
+                else _default_page_size(max_len)
+            self.num_pages = num_pages if num_pages is not None \
+                else capacity * (max_len // self.page_size)
+            self.store = PagedKVStore.for_model(
+                cfg, page_size=self.page_size, num_pages=self.num_pages,
+                max_len=max_len)
+            self.pool = self.store.pool
+            self.max_queued_pages = max_queued_pages if max_queued_pages \
+                is not None else 2 * self.num_pages
+        else:
+            self.page_size = max_len
+            self.num_pages = capacity
+            self.store = None
+            self.pool = CachePool(cfg, capacity, max_len, warn=False)
+            # slot-mode queue units are members, same as max_queue — the
+            # default budget never binds (no page pool to protect)
+            self.max_queued_pages = max_queued_pages if max_queued_pages \
+                is not None else max_queue
+        self.capacity = capacity
+
         # observability: watchdog membership is the bucket component of the
         # executable-cache key; a fresh telemetry shares the obs registry so
-        # one snapshot covers both
+        # one snapshot covers both.  Shared prefill adds the dense bucket
+        # (1, 0) to the expected universe — the shared prompt pass always
+        # compiles dense executables, whatever the plan's buckets are.
         self.obs = obs if obs is not None \
             else Observability.create(plan=self.plan)
         self.obs.watchdog.project = lambda key: key[1]
-        self.obs.watchdog.expect(self.possible_buckets())
+        expected = set(self.possible_buckets())
+        if shared_prefill:
+            expected.add((1, 0))
+        self.obs.watchdog.expect(expected)
         self.telemetry = telemetry if telemetry is not None \
             else Telemetry(registry=self.obs.registry)
         self.pad_buckets = pad_buckets
         self.chunked = engine.supports_chunked_prefill(cfg)
 
-        # priority -> FCFS deque of queued sequences
+        # priority -> FCFS deque of queued work (_Group in shared mode,
+        # Sequence in legacy per-member mode)
         self._queues: dict[int, collections.deque] = {}
+        self._groups: list[_Group] = []         # admitted, still prefilling
         self._active: list[Sequence] = []       # admission order
         self.completed: dict[int, list[dict]] = {}
         self.last_buckets: dict[tuple, list[tuple]] = {}
         self._fns: dict = {}                    # compiled-executable cache
+        self._reqs: dict[int, dict] = {}        # rid -> request-level state
+        self._queued_pages = 0                  # worst-case pages queued
+        self._kv_synced = dataclasses.asdict(self.pool.stats) \
+            if self.paged else None
 
     # ------------------------------------------------------------------
-    # submission / state
+    # submission / admission control
     # ------------------------------------------------------------------
 
     @property
     def queued_count(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        n = 0
+        for q in self._queues.values():
+            for item in q:
+                n += item.req.ensemble if isinstance(item, _Group) else 1
+        return n
 
     @property
     def active_count(self) -> int:
-        return len(self._active)
+        return len(self._active) + sum(len(g.members) for g in self._groups)
 
     @property
     def has_work(self) -> bool:
-        return bool(self._active) or self.queued_count > 0
+        return bool(self._active) or bool(self._groups) \
+            or self.queued_count > 0
 
     def possible_buckets(self) -> list[tuple[int, int]]:
         """Every (dp, b) executable bucket this scheduler can produce —
@@ -207,10 +304,87 @@ class Scheduler:
         bound = self.plan.reseed(req.seed).sample(member)
         return bound.dp, bound.bias
 
+    def _request_page_need(self, req: Request) -> int:
+        """Worst-case pages the request can allocate over its lifetime.
+
+        Shared prefill: the prompt's pages once, plus per member the pages
+        its decode span can touch — ``[S-1, S+max_new-1)`` for a patterned
+        member (it rewrites the last prompt position), ``[S, S+max_new-1)``
+        for a dense one; every touched page may need a CoW copy or an
+        extension.  Legacy per-member prefill: each member writes
+        ``[0, S+max_new-1)`` into its own table."""
+        if not self.paged:
+            return req.ensemble     # slot-mode unit: one slot per member
+        S, E = len(req.prompt), req.ensemble
+        ps = self.page_size
+        pf = self.store.pages_for
+        hi = S + req.max_new_tokens - 1
+        if not self.shared_prefill:
+            return E * pf(hi)
+        need = pf(S)
+        for m in range(E):
+            dp, _ = self._pattern_for(req, m)
+            if E == 1:
+                need += pf(hi) - pf(S)
+            else:
+                lo = S - 1 if dp > 1 else S
+                if hi > lo:
+                    need += -(-hi // ps) - lo // ps
+        return need
+
+    def _room_for(self, ensemble: int, need: int) -> bool:
+        if self.queued_count + ensemble > self.max_queue:
+            return False
+        return self._queued_pages + need <= self.max_queued_pages
+
+    def _find_victim(self, priority: int):
+        """Newest fully-queued request of the lowest eligible priority.
+
+        Only strictly-lower-priority (higher value) work is sheddable, and
+        only if none of its members has been admitted yet — shedding half
+        an in-flight ensemble would strand the admitted members."""
+        for prio in sorted(self._queues, reverse=True):
+            if prio <= priority:
+                continue
+            q = self._queues[prio]
+            for item in reversed(q):
+                rid = item.req.rid
+                if not self._reqs.get(rid, {}).get("admitted", False):
+                    return prio, item
+        return None
+
+    def _shed(self, priority: int, ensemble: int, need: int) -> int:
+        """Shed strictly-lower-priority queued requests (newest first)
+        until the incoming request fits; returns requests shed."""
+        shed = 0
+        while not self._room_for(ensemble, need):
+            found = self._find_victim(priority)
+            if found is None:
+                break
+            prio, item = found
+            q = self._queues[prio]
+            rid = item.req.rid
+            if isinstance(item, _Group):
+                q.remove(item)
+                self._queued_pages -= item.page_need
+            else:
+                # legacy mode: drop every queued member of the request
+                each = self._reqs.get(rid, {}).get("need_each", 1)
+                for s in [s for s in q if s.req.rid == rid]:
+                    q.remove(s)
+                    self._queued_pages -= each if self.paged else 1
+            self._reqs.pop(rid, None)
+            self.telemetry.requests_shed += 1
+            shed += 1
+        return shed
+
     def submit(self, req: Request, now: float = 0.0) -> bool:
         """Queue a request (all its ensemble members).  Returns False and
-        queues nothing when admission control rejects it (backpressure:
-        the whole ensemble would overflow ``max_queue``)."""
+        queues nothing when admission control rejects it: the request can
+        never be served (worst-case page need exceeds the pool), or the
+        queue is saturated and no lower-priority work can be shed to make
+        room (page-aware backpressure — a burst of long prompts sheds or
+        rejects instead of deadlocking the pool)."""
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         if len(req.prompt) < 1:
@@ -220,14 +394,41 @@ class Scheduler:
                 f"request {req.rid}: prompt+generation "
                 f"({len(req.prompt)}+{req.max_new_tokens}) exceeds "
                 f"max_len {self.max_len}")
-        if self.queued_count + req.ensemble > self.max_queue:
+        need = self._request_page_need(req)
+        # infeasible outright: could never be admitted even on an idle pool
+        if self.paged and need > self.num_pages:
             self.telemetry.requests_rejected += 1
             return False
+        if not self.paged and self.shared_prefill \
+                and req.ensemble > self.capacity:
+            self.telemetry.requests_rejected += 1
+            return False
+        if not self._room_for(req.ensemble, need):
+            self._shed(req.priority, req.ensemble, need)
+        if not self._room_for(req.ensemble, need):
+            self.telemetry.requests_rejected += 1
+            return False
+
         q = self._queues.setdefault(req.priority, collections.deque())
+        members = []
         for m in range(req.ensemble):
             dp, b = self._pattern_for(req, m)
-            q.append(Sequence(req=req, member=m, dp=dp, bias=b,
-                              t_submit=now))
+            members.append(Sequence(req=req, member=m, dp=dp, bias=b,
+                                    t_submit=now))
+        self._reqs[req.rid] = {"t_submit": now, "ensemble": req.ensemble,
+                               "first": False, "admitted": False}
+        if self.shared_prefill:
+            g = _Group(req=req, members=members, page_need=need,
+                       t_submit=now)
+            q.append(g)
+            self._queued_pages += need
+        else:
+            each = need // max(req.ensemble, 1) if self.paged else 1
+            self._reqs[req.rid]["need_each"] = each
+            for s in members:
+                s.owner = (req.rid, s.member)
+                q.append(s)
+                self._queued_pages += each
         return True
 
     # ------------------------------------------------------------------
@@ -246,6 +447,7 @@ class Scheduler:
         prefill_tokens = self._prefill(now)
         decoded = self._decode(now)
         evicted = self._evict(now)
+        self._sync_kv_stats()
         return {"admitted": admitted, "prefill_tokens": prefill_tokens,
                 "decoded": decoded, "evicted": evicted,
                 "active": self.active_count, "queued": self.queued_count}
@@ -253,46 +455,218 @@ class Scheduler:
     def _now(self, fallback: float) -> float:
         return self._clock.now() if self._clock is not None else fallback
 
+    def _meta(self, rid: int) -> dict:
+        """Request-level telemetry state (tolerant of shed requests)."""
+        return self._reqs.setdefault(
+            rid, {"t_submit": 0.0, "first": True, "admitted": True})
+
+    def _sync_kv_stats(self) -> None:
+        """Mirror page-pool stats into telemetry (delta-based, so several
+        replicas can share one Telemetry without clobbering each other)."""
+        if not self.paged:
+            return
+        tel, stats = self.telemetry, dataclasses.asdict(self.pool.stats)
+        last = self._kv_synced
+        tel.cow_forks += stats["forks"] - last["forks"]
+        tel.cow_copies += stats["cow_copies"] - last["cow_copies"]
+        tel.kv_pages_allocated += stats["allocated"] - last["allocated"]
+        tel.kv_pages_freed += stats["freed"] - last["freed"]
+        self._kv_synced = stats
+        tel.set_page_gauges(self.name, self.pool.in_use_count,
+                            self.pool.free_count, self.num_pages,
+                            self.page_size)
+
     # ------------------------------------------------------------------
     def _admit(self, now: float) -> int:
+        """Admit queued work in (priority, FCFS) order while the pool can
+        reserve its worst-case page need.  Admission stops at the first
+        failure — no skip-ahead, so a large request at the head cannot be
+        starved by a stream of small ones behind it."""
         admitted = 0
         for prio in sorted(self._queues):
             q = self._queues[prio]
-            while q and self.pool.free_count > 0:
-                seq = q.popleft()
-                seq.slot = self.pool.allocate()
-                seq.state = "prefill"
-                seq.t_admit = now
-                self.telemetry.queue_delay.record(now - seq.t_submit)
-                self._active.append(seq)
-                admitted += 1
+            while q:
+                item = q[0]
+                if isinstance(item, _Group):
+                    if not self._admit_group(item, now):
+                        return admitted
+                    q.popleft()
+                    admitted += len(item.members)
+                else:
+                    if not self._admit_member(item, now):
+                        return admitted
+                    q.popleft()
+                    admitted += 1
         return admitted
 
+    def _admit_group(self, g: _Group, now: float) -> bool:
+        rid = g.req.rid
+        if self.paged:
+            if not self.pool.try_reserve(rid, g.page_need):
+                return False
+            g.bt = self.pool.alloc_table(0, owner=rid)
+        else:
+            if self.pool.free_count < len(g.members):
+                return False
+            for s in g.members:
+                s.slot = self.pool.allocate()
+        self._queued_pages -= g.page_need
+        t = self.telemetry
+        t.queue_delay.record(now - g.t_submit)
+        for s in g.members:
+            s.owner = rid
+            s.state = "prefill"
+            s.t_admit = now
+            t.queue_delay_member.record(now - s.t_submit)
+        self._meta(rid)["admitted"] = True
+        self._groups.append(g)
+        return True
+
+    def _admit_member(self, seq: Sequence, now: float) -> bool:
+        """Legacy per-member admission (shared_prefill=False)."""
+        rid = seq.req.rid
+        need = self._meta(rid).get("need_each", 1)
+        if self.paged:
+            if not self.pool.try_reserve(seq.owner, need):
+                return False
+            seq.bt = self.pool.alloc_table(0, owner=seq.owner)
+        else:
+            if self.pool.free_count < 1:
+                return False
+            seq.slot = self.pool.allocate()
+        self._queued_pages -= need if self.paged else 1
+        seq.state = "prefill"
+        seq.t_admit = now
+        t = self.telemetry
+        t.queue_delay_member.record(now - seq.t_submit)
+        meta = self._meta(rid)
+        if not meta.get("admitted", True):
+            meta["admitted"] = True
+            t.queue_delay.record(now - meta["t_submit"])
+        self._active.append(seq)
+        return True
+
     # ------------------------------------------------------------------
+    # prefill
+    # ------------------------------------------------------------------
+
     def _prefill(self, now: float) -> int:
         """Advance the oldest pending prefill by one chunk."""
+        g = self._groups[0] if self._groups else None
+        if g is not None:
+            return self._prefill_group(g, now)
         seq = next((s for s in self._active if s.state == "prefill"), None)
         if seq is None:
             return 0
-        pat = self._pat(seq)
+        return self._prefill_member(seq, now)
+
+    def _read_prefill_cache(self, bt, slot, pos: int):
+        if self.paged:
+            return {"layers": self.store.materialize_layers(bt),
+                    "pos": jnp.asarray(pos, jnp.int32)}
+        return self.pool.read(slot)
+
+    def _prefill_group(self, g: _Group, now: float) -> int:
+        """One dense (IDENTITY-pattern) prefill chunk for a whole ensemble:
+        the request's prompt is computed ONCE regardless of E."""
+        S, E = len(g.req.prompt), len(g.members)
+        remaining = S - g.prefill_done
+        slot0 = g.members[0].slot
+        if self.chunked:
+            take = min(self.prefill_chunk, remaining)
+            chunk = jnp.asarray(
+                g.req.prompt[g.prefill_done:g.prefill_done + take],
+                jnp.int32)[None]
+            cache = self._read_prefill_cache(g.bt, slot0, g.prefill_done)
+            logits, new = self._prefill_extend_fn((1, 0), take)(
+                self.params, cache, chunk)
+            lo = g.prefill_done
+        else:
+            take = remaining
+            prompt = jnp.asarray(g.req.prompt, jnp.int32)[None]
+            logits, new = self._prefill_full_fn((1, 0), S)(
+                self.params, prompt)
+            lo = 0
+        if self.paged:
+            self.store.absorb(g.bt, new["layers"], lo, g.prefill_done + take,
+                              owner=g.req.rid)
+        else:
+            self.pool.write(slot0, new)
+        g.prefill_done += take
+        self.telemetry.prefill_chunks += 1
+        self.telemetry.prompt_tokens += take
+        self.telemetry.prompt_tokens_members += take * E
+        if g.prefill_done >= S:
+            self._finish_group_prefill(g, logits, now)
+        return take
+
+    def _finish_group_prefill(self, g: _Group, logits, now: float) -> None:
+        """Fork the prefilled KV to every member (CoW) and start decoding.
+
+        Dense-bucket members take the prefill's last-token logits as their
+        first token — bitwise the per-member-prefill result.  Patterned
+        members re-feed the last prompt token through their own bucket at
+        position S-1 on their next decode step."""
+        first_logits = np.asarray(logits[0])
+        t = self._now(now)
+        tel = self.telemetry
+        if self.paged:
+            for s in g.members:
+                s.bt = self.store.fork(g.bt)
+            self.store.free(g.bt)       # members' refs keep the pages live
+            g.bt = None
+        else:
+            cache = self.pool.read(g.members[0].slot)
+            for s in g.members[1:]:
+                self.pool.write(s.slot, engine.fork_kv(cache))
+        meta = self._meta(g.req.rid)
+        for s in g.members:
+            s.prefill_done = g.prefill_done
+            s.state = "running"
+            if s.dp <= 1:               # dense member: first token is free
+                tok = self._next_token(s, first_logits)
+                s.first_logits = first_logits
+                s.out_tokens.append(tok)
+                s.t_first = s.t_last = t
+                tel.ttft_member.record(t - s.t_submit)
+                if not meta["first"]:
+                    meta["first"] = True
+                    tel.ttft.record(t - meta["t_submit"])
+                tel.record_decode_tokens(1, 0, 1)
+            self._active.append(s)
+        self._groups.remove(g)
+
+    def _prefill_member(self, seq: Sequence, now: float) -> int:
+        """Legacy per-member prefill: each member computes the full prompt
+        with its OWN pattern (prefill cost scales with E)."""
+        pat_bucket = seq.bucket
         remaining = seq.prompt_len - seq.prefill_done
         if self.chunked:
             take = min(self.prefill_chunk, remaining)
             chunk = jnp.asarray(
                 seq.req.prompt[seq.prefill_done:seq.prefill_done + take],
                 jnp.int32)[None]
-            logits, cache = self._prefill_extend_fn(seq.bucket, take)(
-                self.params, self.pool.read(seq.slot), chunk)
+            cache = self._read_prefill_cache(seq.bt, seq.slot,
+                                             seq.prefill_done)
+            logits, new = self._prefill_extend_fn(pat_bucket, take)(
+                self.params, cache, chunk)
+            lo = seq.prefill_done
         else:
             take = remaining
             prompt = jnp.asarray(seq.req.prompt, jnp.int32)[None]
-            logits, cache = self._prefill_full_fn(seq.bucket,
-                                                  seq.prompt_len)(
+            logits, new = self._prefill_full_fn(pat_bucket,
+                                                seq.prompt_len)(
                 self.params, prompt)
-        self.pool.write(seq.slot, cache)
+            lo = 0
+        if self.paged:
+            self.store.absorb(seq.bt, new["layers"], lo,
+                              seq.prefill_done + take, owner=seq.owner)
+        else:
+            self.pool.write(seq.slot, new)
         seq.prefill_done += take
         self.telemetry.prefill_chunks += 1
         self.telemetry.prompt_tokens += take
+        self.telemetry.prompt_tokens_members += take
         if seq.prefill_done >= seq.prompt_len:
             # prompt complete: the prefill logits yield the first token.
             # Timestamp AFTER the compute (np.asarray blocks on the device)
@@ -303,11 +677,18 @@ class Scheduler:
             seq.out_tokens.append(tok)
             seq.state = "running"
             seq.t_first = seq.t_last = t
-            self.telemetry.ttft.record(t - seq.t_submit)
+            self.telemetry.ttft_member.record(t - seq.t_submit)
+            meta = self._meta(seq.req.rid)
+            if not meta["first"]:
+                meta["first"] = True
+                self.telemetry.ttft.record(t - meta["t_submit"])
             self.telemetry.record_decode_tokens(seq.dp, seq.bias, 1)
         return take
 
     # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
     def _decode(self, now: float) -> int:
         running = [s for s in self._active
                    if s.state == "running" and not s.finished]
@@ -325,28 +706,48 @@ class Scheduler:
             seqs = buckets[key]
             n = len(seqs)
             width = _next_pow2(n) if self.pad_buckets else n
-            caches = [self.pool.read(s.slot) for s in seqs]
-            caches += [caches[0]] * (width - n)  # pad slots are discarded
-            layers = jax.tree.map(
-                lambda *a: jnp.concatenate(a, axis=1),
-                *[c["layers"] for c in caches])
+            if self.paged:
+                per_seq = [self.store.materialize_layers(s.bt)
+                           for s in seqs]
+            else:
+                per_seq = [self.pool.read(s.slot)["layers"] for s in seqs]
+            per_seq += [per_seq[0]] * (width - n)  # pad slots are discarded
+            layers = jax.tree.map(lambda *a: jnp.concatenate(a, axis=1),
+                                  *per_seq)
             pos = jnp.asarray([s.pos for s in seqs]
                               + [seqs[0].pos] * (width - n), jnp.int32)
             tokens = jnp.asarray(
-                [[s.out_tokens[-1]] for s in seqs]
+                [[s.feed_token] for s in seqs]
                 + [[0]] * (width - n), jnp.int32)
             logits, new = self._decode_fn(key)(
                 self.params, {"layers": layers, "pos": pos}, tokens)
             logits = np.asarray(logits)           # blocks until compute done
             t = self._now(now)
             for i, s in enumerate(seqs):
-                self.pool.write(s.slot, {
-                    "layers": jax.tree.map(lambda a: a[:, i:i + 1],
-                                           new["layers"]),
-                    "pos": new["pos"][i]})
+                write_pos = s.pos               # where this step's KV landed
+                sl = jax.tree.map(lambda a, _i=i: a[:, _i:_i + 1],
+                                  new["layers"])
+                if self.paged:
+                    self.store.absorb(s.bt, sl, write_pos, write_pos + 1,
+                                      owner=s.owner)
+                else:
+                    self.pool.write(s.slot, {"layers": sl,
+                                             "pos": new["pos"][i]})
+                first = not s.out_tokens
                 tok = self._next_token(s, logits[i])
                 s.out_tokens.append(tok)
-                self.telemetry.tpot.record(t - s.t_last)
+                if first:
+                    # patterned ensemble member producing its first token
+                    # through its own bucket (shared-prefill path)
+                    s.first_logits = logits[i]
+                    s.t_first = t
+                    self.telemetry.ttft_member.record(t - s.t_submit)
+                    meta = self._meta(s.req.rid)
+                    if not meta["first"]:
+                        meta["first"] = True
+                        self.telemetry.ttft.record(t - meta["t_submit"])
+                else:
+                    self.telemetry.tpot.record(t - s.t_last)
                 s.t_last = t
             self.telemetry.record_decode_tokens(key[0], key[1], n)
             decoded += n
@@ -367,8 +768,12 @@ class Scheduler:
                 continue
             s.state = "done"
             s.t_done = now
-            self.pool.free(s.slot)
-            s.slot = None
+            if self.paged:
+                self.store.free(s.bt)
+                s.bt = None
+            else:
+                self.pool.free(s.slot)
+                s.slot = None
             self.telemetry.members_completed += 1
             members = self.completed.setdefault(s.req.rid, [])
             members.append({
@@ -379,11 +784,74 @@ class Scheduler:
                 "ttft": (s.t_first - s.t_submit
                          if s.t_first is not None else None),
             })
+            if self.paged and not self.shared_prefill:
+                self.pool.release(s.owner)
             if len(members) == s.req.ensemble:
                 self.telemetry.requests_completed += 1
+                if self.paged and self.shared_prefill:
+                    self.pool.release(s.req.rid)
+                self._reqs.pop(s.req.rid, None)
             evicted += 1
         self._active = still_active
         return evicted
+
+    # ------------------------------------------------------------------
+    # warmup & telemetry lifecycle
+    # ------------------------------------------------------------------
+
+    def warmup(self, decode_widths: tuple = (1, 2, 4, 8),
+               chunk_lens: Optional[tuple] = None) -> int:
+        """AOT-compile the serving executable universe before taking load.
+
+        Production serving warms its compile cache before opening to
+        traffic; without it, the first requests of a trace pay
+        multi-second XLA compiles that swamp queue-delay and TTFT
+        measurements.  Compiles the decode executable for every plan
+        bucket at each batch width in ``decode_widths``, plus the
+        prefill-chunk executables (``chunk_lens`` defaults to the full
+        prefill chunk; pass the distinct chunk lengths of a known trace
+        for full coverage).  Runs on dummy inputs and touches nothing but
+        the executable cache (and its watchdog/lookup accounting), so it
+        is safe on a live instance.  Returns the executables compiled."""
+        if not self.chunked:
+            chunk_lens = ()
+        elif chunk_lens is None:
+            chunk_lens = (self.prefill_chunk,)
+        buckets = self.possible_buckets()
+        # shared prefill always prefills dense; legacy prefills per bucket
+        prefill_buckets = [(1, 0)] if self.shared_prefill else buckets
+        compiled = 0
+        for b in prefill_buckets:
+            for L in sorted(set(int(x) for x in chunk_lens)):
+                cache = engine.init_cache(self.cfg, 1, self.max_len)[0]
+                cache = {"layers": cache["layers"],
+                         "pos": jnp.asarray(0, jnp.int32)}
+                tok = jnp.zeros((1, L), jnp.int32)
+                out = self._prefill_extend_fn(b, L)(self.params, cache, tok)
+                jax.block_until_ready(out[0])
+                compiled += 1
+        for b in buckets:
+            fn = self._decode_fn(b)
+            for w in sorted(set(int(x) for x in decode_widths)):
+                cache = engine.init_cache(self.cfg, w, self.max_len)[0]
+                cache = {"layers": cache["layers"],
+                         "pos": jnp.ones((w,), jnp.int32)}
+                tok = jnp.zeros((w, 1), jnp.int32)
+                out = fn(self.params, cache, tok)
+                jax.block_until_ready(out[0])
+                compiled += 1
+        return compiled
+
+    def reset_telemetry(self, telemetry: Optional[Telemetry] = None
+                        ) -> Telemetry:
+        """Swap in fresh telemetry (typically after ``warmup``) — drops
+        warmup compile-lookup noise so a measured run starts from zero.
+        Page-pool gauges republish into the new registry immediately."""
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        if self.paged:
+            self._kv_synced = dataclasses.asdict(self.pool.stats)
+        self._sync_kv_stats()
+        return self.telemetry
 
     # ------------------------------------------------------------------
     # sampling & compiled-fn caches
@@ -407,10 +875,17 @@ class Scheduler:
                                   bias=b, nb=self.cfg.pattern_nb,
                                   backend=self.pattern_impl)
 
+    def _lookup(self, key: tuple) -> bool:
+        """Executable-cache probe with per-replica hit/miss accounting."""
+        hit = key in self._fns
+        self.telemetry.record_compile_lookup(self.name, hit)
+        if not hit:
+            self.obs.watchdog.record_compile(key)
+        return hit
+
     def _decode_fn(self, bucket: tuple):
         key = ("decode", bucket)
-        if key not in self._fns:
-            self.obs.watchdog.record_compile(key)
+        if not self._lookup(key):
             pat = self._bucket_pat(bucket)
             self._fns[key] = jax.jit(functools.partial(
                 engine.decode_step_ragged, self.cfg, pat=pat))
@@ -420,8 +895,7 @@ class Scheduler:
         # chunk_len is static; all full-size chunks share one executable,
         # each distinct remainder length compiles once
         key = ("prefill_extend", bucket, chunk_len)
-        if key not in self._fns:
-            self.obs.watchdog.record_compile(key)
+        if not self._lookup(key):
             pat = self._bucket_pat(bucket)
             self._fns[key] = jax.jit(functools.partial(
                 engine.prefill_extend, self.cfg, pat=pat))
@@ -429,8 +903,7 @@ class Scheduler:
 
     def _prefill_full_fn(self, bucket: tuple, prompt_len: int):
         key = ("prefill_full", bucket, prompt_len)
-        if key not in self._fns:
-            self.obs.watchdog.record_compile(key)
+        if not self._lookup(key):
             pat = self._bucket_pat(bucket)
             cfg, max_len = self.cfg, self.max_len
 

@@ -1,0 +1,226 @@
+"""Property tests for the paged KV cache (serve/kv): refcount conservation
+under random alloc/fork/write/free interleavings, leak/double-free
+detection, reservation soundness, and bitwise copy-on-write isolation.
+
+Uses hypothesis when installed; tests/_hyp.py provides a deterministic
+fallback engine otherwise."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.kv import BlockTable, PagedKVStore, PageError, PagePool
+
+from _hyp import given, settings, strategies as st
+
+
+# ==========================================================================
+# allocator properties (pure bookkeeping, no arrays)
+# ==========================================================================
+
+@settings(max_examples=30)
+@given(st.integers(0, 10**9))
+def test_refcount_conservation_random_interleavings(seed):
+    """After EVERY operation of a random alloc/fork/cow/extend/free walk,
+    each live page's refcount equals its occurrence count across live
+    tables, and the free list partitions the rest.  At the end, freeing
+    everything returns the pool to pristine — no leaked pages."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=16, page_size=4)
+    tables: list[BlockTable] = []
+    for _ in range(60):
+        op = rng.integers(5)
+        if op == 0:                                   # alloc
+            bt = pool.alloc_table(int(rng.integers(1, 4)))
+            if bt is not None:
+                tables.append(bt)
+        elif op == 1 and tables:                      # fork
+            tables.append(pool.fork(tables[int(rng.integers(len(tables)))]))
+        elif op == 2 and tables:                      # CoW write
+            bt = tables[int(rng.integers(len(tables)))]
+            if len(bt.pages):
+                try:
+                    pool.make_private(bt, int(rng.integers(len(bt.pages))))
+                except PageError:
+                    pass                              # exhausted: legal here
+        elif op == 3 and tables:                      # extend
+            pool.extend(tables[int(rng.integers(len(tables)))])
+        elif op == 4 and tables:                      # free
+            bt = tables.pop(int(rng.integers(len(tables))))
+            pool.free_table(bt)
+        pool.assert_balanced(tables)                  # the invariant
+    for bt in tables:
+        pool.free_table(bt)
+    pool.assert_balanced([])
+    assert pool.free_count == pool.num_pages          # nothing leaked
+    assert pool.in_use_count == 0
+
+
+def test_double_free_and_use_after_free_raise():
+    pool = PagePool(num_pages=4, page_size=2)
+    bt = pool.alloc_table(2)
+    pool.free_table(bt)
+    with pytest.raises(PageError):
+        pool.free_table(bt)                           # double free
+    with pytest.raises(PageError):
+        pool.fork(bt)                                 # use after free
+    with pytest.raises(PageError):
+        pool.extend(bt)
+    with pytest.raises(PageError):
+        pool.make_private(bt, 0)
+    pid = pool.alloc_page()
+    pool.decref(pid)
+    with pytest.raises(PageError):
+        pool.decref(pid)                              # refcount underflow
+    with pytest.raises(PageError):
+        pool.incref(99)                               # foreign page
+
+
+@settings(max_examples=20)
+@given(st.integers(1, 6), st.integers(0, 10**9))
+def test_reservations_are_binding(n_reserve, seed):
+    """An owner that reserved N pages can always allocate them, no matter
+    how many unreserved allocations happen in between — unreserved callers
+    never dip into the reserved balance."""
+    rng = np.random.default_rng(seed)
+    pool = PagePool(num_pages=8, page_size=2)
+    assert pool.try_reserve("vip", n_reserve)
+    # greedy unreserved allocation until refusal
+    while pool.alloc_page() is not None:
+        pass
+    assert pool.free_count == n_reserve               # reservation held
+    got = [pool.alloc_page(owner="vip") for _ in range(n_reserve)]
+    assert all(p is not None for p in got)            # the guarantee
+    assert pool.alloc_page(owner="vip") is None       # and no more
+    # over-reserving is refused up front
+    pool2 = PagePool(num_pages=4, page_size=2)
+    assert pool2.try_reserve("a", 3)
+    assert not pool2.try_reserve("b", 2)
+    assert pool2.try_reserve("b", 1)
+
+
+def test_fork_is_refcount_only():
+    pool = PagePool(num_pages=8, page_size=4)
+    bt = pool.alloc_table(3)
+    forks = [pool.fork(bt) for _ in range(3)]
+    assert all(f.pages == bt.pages for f in forks)    # shared, not copied
+    assert all(pool.refcount(p) == 4 for p in bt.pages)
+    assert pool.stats.allocated == 3                  # forks allocate nothing
+    for f in forks:
+        pool.free_table(f)
+    assert all(pool.refcount(p) == 1 for p in bt.pages)
+    assert pool.stats.freed == 0                      # originals still live
+    pool.free_table(bt)
+    assert pool.free_count == 8
+
+
+# ==========================================================================
+# storage layer: materialize/absorb and bitwise CoW isolation
+# ==========================================================================
+
+def _toy_store(page_size=4, num_pages=16, max_len=16):
+    """A store over a synthetic 2-leaf cache tree, seq axis 2."""
+    template = {"k": jnp.zeros((2, 1, page_size, 3), jnp.float32),
+                "v": jnp.zeros((2, 1, page_size, 3), jnp.float32)}
+    return PagedKVStore(template, page_size=page_size, num_pages=num_pages,
+                        max_len=max_len)
+
+
+def _dense(rng, max_len):
+    return {"k": jnp.asarray(rng.normal(size=(2, 1, max_len, 3)),
+                             jnp.float32),
+            "v": jnp.asarray(rng.normal(size=(2, 1, max_len, 3)),
+                             jnp.float32)}
+
+
+@settings(max_examples=15)
+@given(st.integers(0, 10**9))
+def test_absorb_materialize_roundtrip(seed):
+    """Random absorb spans reproduce the dense reference bitwise."""
+    rng = np.random.default_rng(seed)
+    store = _toy_store()
+    dense = _dense(rng, store.max_len)
+    bt = store.alloc(0)
+    hi_max = int(rng.integers(1, store.max_len + 1))
+    # cover [0, hi_max) by random contiguous spans, in order
+    lo = 0
+    while lo < hi_max:
+        hi = min(int(lo + rng.integers(1, 6)), hi_max)
+        store.absorb(bt, dense, lo, hi)
+        lo = hi
+    got = store.materialize_layers(bt)
+    ref_k = np.asarray(dense["k"])
+    got_k = np.asarray(got["k"])
+    assert (got_k[:, :, :hi_max] == ref_k[:, :, :hi_max]).all()
+    assert (got_k[:, :, hi_max:] == 0).all()          # template padding
+    store.free(bt)
+
+
+@settings(max_examples=10)
+@given(st.integers(0, 10**9), st.integers(2, 4))
+def test_cow_fork_then_diverge_is_bitwise_independent(seed, n_members):
+    """Fork-then-diverge equals independent per-member writes, bitwise:
+    each member's view after its private writes is identical to a table
+    built from scratch with the same contents, and the writes of one
+    member never leak into another (or the parent's frozen content)."""
+    rng = np.random.default_rng(seed)
+    store = _toy_store(page_size=4, num_pages=32, max_len=16)
+    S = int(rng.integers(5, 12))                      # shared prefix length
+    T = int(rng.integers(S + 1, store.max_len + 1))   # diverged length
+    base = _dense(rng, store.max_len)
+
+    parent = store.alloc(0)
+    store.absorb(parent, base, 0, S)
+    members = [store.fork(parent) for _ in range(n_members)]
+    privates = [_dense(rng, store.max_len) for _ in range(n_members)]
+    for bt, priv in zip(members, privates):           # diverge in [S-1, T)
+        store.absorb(bt, priv, S - 1, T)
+
+    for bt, priv in zip(members, privates):
+        # reference: independent table with the same logical contents
+        ref = store.alloc(0)
+        store.absorb(ref, base, 0, S - 1)
+        store.absorb(ref, priv, S - 1, T)
+        for leaf in ("k", "v"):
+            got = np.asarray(store.materialize_layers(bt)[leaf])
+            want = np.asarray(store.materialize_layers(ref)[leaf])
+            assert (got == want).all(), f"member diverged wrong in {leaf}"
+        store.free(ref)
+    # the parent's shared prefix is untouched by every member's writes
+    par_k = np.asarray(store.materialize_layers(parent)["k"])
+    assert (par_k[:, :, :S] == np.asarray(base["k"])[:, :, :S]).all()
+    assert (par_k[:, :, S:] == 0).all()
+
+    store.free(parent)
+    for bt in members:
+        store.free(bt)
+    store.assert_balanced([])
+    assert store.pool.free_count == store.pool.num_pages
+
+
+def test_absorb_guards():
+    store = _toy_store()
+    rng = np.random.default_rng(0)
+    dense = _dense(rng, store.max_len)
+    bt = store.alloc(0)
+    with pytest.raises(PageError):                    # hole in the table
+        store.absorb(bt, dense, 8, 10)
+    with pytest.raises(PageError):                    # past max_len
+        store.absorb(bt, dense, 0, store.max_len + 1)
+    store.free(bt)
+    # exhaustion during extension is a loud error, not corruption
+    small = _toy_store(page_size=4, num_pages=1, max_len=16)
+    bt1 = small.alloc(4)
+    with pytest.raises(PageError):
+        small.absorb(bt1, dense, 4, 8)
+
+
+def test_for_model_gates_unpageable_archs():
+    from repro.configs import get_smoke
+    from repro.serve import engine
+    gemma = get_smoke("gemma3_1b")                    # ring cache
+    assert not engine.supports_paged_kv(gemma)
+    with pytest.raises(ValueError, match="paged"):
+        PagedKVStore.for_model(gemma, page_size=4, num_pages=4, max_len=16)
+    mamba = get_smoke("mamba2_1_3b")                  # SSM state
+    assert not engine.supports_paged_kv(mamba)

@@ -315,11 +315,13 @@ def test_telemetry_snapshot_schema_unchanged():
     tel.record_decode_tokens(1, 0, 5)
     snap = tel.snapshot(duration_s=2.0)
     assert set(snap) == {
-        "ttft", "tpot", "queue_delay", "tokens_generated", "prompt_tokens",
-        "requests_completed", "requests_rejected", "members_completed",
-        "decode_steps", "prefill_chunks", "mean_ffn_flop_fraction",
-        "bucket_tokens", "duration_s", "throughput_tok_s",
-        "throughput_req_s"}
+        "ttft", "ttft_member", "tpot", "queue_delay", "queue_delay_member",
+        "tokens_generated", "prompt_tokens", "prompt_tokens_members",
+        "prefill_shared_ratio", "requests_completed", "requests_rejected",
+        "requests_shed", "members_completed", "decode_steps",
+        "prefill_chunks", "mean_ffn_flop_fraction", "bucket_tokens",
+        "kv_pages", "cow_forks", "cow_copies", "compile_cache_hits",
+        "router", "duration_s", "throughput_tok_s", "throughput_req_s"}
     assert set(snap["ttft"]) == {"count", "mean", "p50", "p90", "p95", "max"}
     assert snap["requests_rejected"] == 2
     assert snap["tokens_generated"] == 15

@@ -1,0 +1,290 @@
+"""Paged-KV serving integration tests: shared-prefill telemetry accounting,
+bitwise dense-bucket equivalence vs per-member prefill, prefill-FLOP
+independence of ensemble size, page-aware burst backpressure, and the
+bucket-affinity multi-replica router."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core.plan import DropoutPlan
+from repro.models import init_lm, materialize
+from repro import serve
+
+ARCH = "qwen2_1_5b"
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke(ARCH)
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    return cfg, params
+
+
+def _prompt(rng, n):
+    return rng.integers(0, 500, n).astype(np.int32)
+
+
+def _dense_plan():
+    """Plan whose every draw is dp=1 — ensembles stay in the dense bucket."""
+    return DropoutPlan(family="rdp", dist=(1.0,), nb=32)
+
+
+def _dp2_plan():
+    return DropoutPlan(family="rdp", dist=(0.0, 1.0), nb=32)
+
+
+def _trace(rng, n, ensemble, prompt_len=8, max_new=4):
+    return [serve.Request(rid=i, prompt=_prompt(rng, prompt_len),
+                          max_new_tokens=max_new, ensemble=ensemble,
+                          seed=100 + i, arrival_time=0.0)
+            for i in range(n)]
+
+
+# ==========================================================================
+# telemetry: shared prefill counts prompt compute once per request
+# ==========================================================================
+
+def test_prefill_counted_once_per_request(setup):
+    """Regression for the double-counting bug: an ensemble-of-2 request
+    used to record 2 TTFT samples and 2x prompt tokens.  Per-request
+    series must count requests; per-member series count members."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    n, E, S = 6, 2, 8
+    sched = serve.Scheduler(cfg, params, capacity=8, max_len=24,
+                            plan=_dp2_plan())
+    out = serve.Server(sched).run(_trace(rng, n, E, prompt_len=S))
+    t = out["telemetry"]
+    assert t["requests_completed"] == n
+    assert t["members_completed"] == n * E
+    # per-request series: one sample per request, not per member
+    assert t["ttft"]["count"] == n
+    assert t["queue_delay"]["count"] == n
+    # per-member series carry the member cardinality
+    assert t["ttft_member"]["count"] == n * E
+    assert t["queue_delay_member"]["count"] == n * E
+    # prompt compute: shared prefill runs each prompt ONCE
+    assert t["prompt_tokens"] == n * S
+    assert t["prompt_tokens_members"] == n * S * E
+    assert t["prefill_shared_ratio"] == pytest.approx(1 - 1 / E)
+
+
+def test_legacy_mode_prefill_scales_with_members(setup):
+    """shared_prefill=False restores per-member prefill: prompt compute
+    scales with E and the shared ratio is zero."""
+    cfg, params = setup
+    rng = np.random.default_rng(0)
+    n, E, S = 3, 2, 8
+    sched = serve.Scheduler(cfg, params, capacity=8, max_len=24,
+                            plan=_dp2_plan(), shared_prefill=False)
+    out = serve.Server(sched).run(_trace(rng, n, E, prompt_len=S))
+    t = out["telemetry"]
+    assert t["prompt_tokens"] == n * S * E           # every member prefills
+    assert t["prompt_tokens_members"] == n * S * E
+    assert t["prefill_shared_ratio"] == 0.0
+    assert t["ttft"]["count"] == n                   # still per-request
+    assert t["ttft_member"]["count"] == n * E
+
+
+def test_prefill_flops_independent_of_ensemble_size(setup):
+    """Same trace at E=2 and E=4: prompt tokens actually computed are
+    IDENTICAL — prefill cost does not grow with ensemble size."""
+    cfg, params = setup
+
+    def run(E):
+        rng = np.random.default_rng(1)
+        sched = serve.Scheduler(cfg, params, capacity=16, max_len=32,
+                                plan=_dp2_plan())
+        out = serve.Server(sched).run(_trace(rng, 4, E, prompt_len=10))
+        return out["telemetry"]
+
+    t2, t4 = run(2), run(4)
+    assert t2["prompt_tokens"] == t4["prompt_tokens"]
+    assert t4["prompt_tokens_members"] == 2 * t2["prompt_tokens_members"]
+    assert t2["prefill_shared_ratio"] == pytest.approx(0.5)
+    assert t4["prefill_shared_ratio"] == pytest.approx(0.75)
+
+
+# ==========================================================================
+# bitwise equivalence: CoW-forked ensemble vs per-member prefill
+# ==========================================================================
+
+def test_dense_bucket_bitwise_identical_to_per_member_prefill(setup):
+    """For the dense bucket (dp=1, b=0): paged shared-prefill ensembles
+    produce BITWISE the same first-token logits and greedy streams as the
+    legacy per-member-prefill slot runtime (acceptance criterion)."""
+    cfg, params = setup
+
+    def run(**kw):
+        rng = np.random.default_rng(2)
+        sched = serve.Scheduler(cfg, params, capacity=8, max_len=24,
+                                plan=_dense_plan(), **kw)
+        out = serve.Server(sched).run(_trace(rng, 3, 2, prompt_len=7))
+        return out["results"], sched
+
+    base, _ = run(paged=False, shared_prefill=False)
+    cow, sched = run()                               # paged + shared (dflt)
+    assert sched.paged and sched.shared_prefill
+    for rid in base:
+        for mb, mc in zip(sorted(base[rid], key=lambda m: m["member"]),
+                          sorted(cow[rid], key=lambda m: m["member"])):
+            assert (mb["dp"], mb["bias"]) == (mc["dp"], mc["bias"]) == (1, 0)
+            assert mb["tokens"] == mc["tokens"], f"rid {rid} diverged"
+            assert (np.asarray(mb["first_logits"])
+                    == np.asarray(mc["first_logits"])).all(), \
+                f"rid {rid}: first logits not bitwise equal"
+
+
+# ==========================================================================
+# page-aware backpressure: bursts shed, never deadlock
+# ==========================================================================
+
+def test_long_prompt_burst_sheds_instead_of_deadlocking(setup):
+    """Deterministic burst of long prompts against a small pool: admission
+    reserves worst-case pages (no mid-flight exhaustion), the queue sheds
+    lower-priority work for urgent arrivals, and every admitted request
+    runs to completion within a bounded number of steps."""
+    cfg, params = setup
+    rng = np.random.default_rng(3)
+    sched = serve.Scheduler(cfg, params, capacity=2, max_len=32,
+                            prefill_chunk=8, max_queue=64)
+    assert sched.paged
+    S, M = 20, 4                                     # 2 pages each, 0 growth
+    burst = [serve.Request(rid=i, prompt=_prompt(rng, S), max_new_tokens=M,
+                           priority=1) for i in range(6)]
+    ok = [sched.submit(r, 0.0) for r in burst]
+    # budget: max_queued_pages = 2 * num_pages = 8 -> four 2-page requests
+    assert ok == [True, True, True, True, False, False]
+    assert sched.telemetry.requests_rejected == 2    # same-prio: no shedding
+    # an urgent request sheds the NEWEST queued low-priority request
+    vip = serve.Request(rid=100, prompt=_prompt(rng, S), max_new_tokens=M,
+                        priority=0)
+    assert sched.submit(vip, 0.0)
+    assert sched.telemetry.requests_shed == 1
+    queued_rids = {item.req.rid
+                   for q in sched._queues.values() for item in q}
+    assert queued_rids == {0, 1, 2, 100}             # rid 3 was shed
+    # a request that can NEVER fit the pool is rejected outright
+    assert not sched.submit(
+        serve.Request(rid=200, prompt=_prompt(rng, 8), max_new_tokens=8,
+                      ensemble=16), 0.0)
+    # drain: everything admitted completes, nothing deadlocks
+    for step in range(500):
+        if not sched.has_work:
+            break
+        sched.step(float(step))
+    assert not sched.has_work, "burst deadlocked"
+    assert sorted(sched.completed) == [0, 1, 2, 100]
+    assert all(len(ms[0]["tokens"]) == M for ms in sched.completed.values())
+    assert sched.pool.reserved_count == 0            # reservations released
+    assert sched.pool.free_count == sched.num_pages  # no page leaked
+    sched.obs.watchdog.assert_clean()
+
+
+# ==========================================================================
+# multi-replica router
+# ==========================================================================
+
+def test_router_bucket_affinity(setup):
+    """Requests with a warm decode bucket route to the replica that
+    compiled it; cold requests land on the least-loaded replica.  Over an
+    alternating dense/dp2 workload the bucket universe partitions across
+    replicas instead of both compiling everything."""
+    cfg, params = setup
+    rng = np.random.default_rng(4)
+    router = serve.Router(cfg, params, replicas=2, capacity=8, max_len=24,
+                          plan=_dp2_plan())
+
+    def drain(now=0.0):
+        for step in range(200):
+            if not router.has_work:
+                return
+            router.step(now + step)
+        raise AssertionError("router did not drain")
+
+    dense = serve.Request(rid=0, prompt=_prompt(rng, 6), max_new_tokens=3)
+    ens = serve.Request(rid=1, prompt=_prompt(rng, 6), max_new_tokens=3,
+                        ensemble=2, seed=7)
+    assert router.submit(dense, 0.0)                 # cold -> replica0
+    drain()
+    assert router.submit(ens, 0.0)                   # cold -> replica1
+    drain()
+    assert router.telemetry.router_affinity_misses == 2
+    warm0 = router._warm_buckets(router.replicas[0])
+    warm1 = router._warm_buckets(router.replicas[1])
+    assert warm0 == {(1, 0)}
+    assert warm1 and all(dp == 2 for dp, _ in warm1)
+    # warm repeats hit their replica
+    assert router.route(serve.Request(rid=2, prompt=_prompt(rng, 6),
+                                      max_new_tokens=3)) == 0
+    r3 = serve.Request(rid=3, prompt=_prompt(rng, 6), max_new_tokens=3,
+                       ensemble=2, seed=7)           # same seed: same buckets
+    assert router.route(r3) == 1
+    assert router.submit(r3, 0.0)
+    drain()
+    assert router.telemetry.router_affinity_hits == 1
+    # results aggregate across replicas; watchdogs stay clean
+    assert sorted(router.completed) == [0, 1, 3]
+    router.assert_clean()
+
+
+def test_router_snapshot_carries_per_replica_series(setup):
+    """The shared-registry snapshot exposes per-replica page-pool gauges
+    and compile-cache hit rates under the replica label."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    router = serve.Router(cfg, params, replicas=2, capacity=4, max_len=24,
+                          plan=_dp2_plan())
+    trace = [serve.Request(rid=i, prompt=_prompt(rng, 6), max_new_tokens=2,
+                           ensemble=2 if i % 2 else 1, seed=i,
+                           arrival_time=0.0) for i in range(4)]
+    out = serve.Server(router).run(trace)
+    t = out["telemetry"]
+    assert t["requests_completed"] == 4
+    reps = {"replica0", "replica1"}
+    assert set(t["kv_pages"]) <= reps and t["kv_pages"]
+    for rec in t["kv_pages"].values():
+        assert rec["in_use"] == 0                    # drained
+        assert rec["free"] == rec["num_pages"]
+    assert set(t["compile_cache_hits"]) <= reps and t["compile_cache_hits"]
+    for rec in t["compile_cache_hits"].values():
+        assert rec["hits"] + rec["misses"] > 0
+        assert 0.0 <= rec["hit_rate"] <= 1.0
+    assert (t["router"]["affinity_hits"]
+            + t["router"]["affinity_misses"]) == 4
+
+
+def test_warmup_precompiles_executable_universe(setup):
+    """After warmup + reset_telemetry, a served trace hits the compile
+    cache on every lookup — the measured run contains zero XLA compiles
+    — and telemetry starts from a clean registry."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    sched = serve.Scheduler(cfg, params, capacity=4, max_len=24,
+                            prefill_chunk=8, plan=_dp2_plan())
+    n = sched.warmup(decode_widths=(1, 2), chunk_lens=(8, 6))
+    assert n > 0
+    tel = sched.reset_telemetry()
+    assert tel is sched.telemetry
+    out = serve.Server(sched).run(
+        [serve.Request(rid=0, prompt=_prompt(rng, 6), max_new_tokens=2,
+                       ensemble=2, seed=3, arrival_time=0.0)])
+    t = out["telemetry"]
+    assert t["requests_completed"] == 1          # fresh registry: only this
+    rec = t["compile_cache_hits"]["replica0"]
+    assert rec["misses"] == 0 and rec["hits"] > 0
+    assert rec["hit_rate"] == 1.0
+    sched.obs.watchdog.assert_clean()            # warmup stayed in-universe
+
+
+def test_router_single_replica_degenerates_to_scheduler(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    router = serve.Router(cfg, params, replicas=1, capacity=4, max_len=24)
+    out = serve.Server(router).run(
+        [serve.Request(rid=0, prompt=_prompt(rng, 6), max_new_tokens=2,
+                       arrival_time=0.0)])
+    assert list(out["results"]) == [0]
+    assert len(out["results"][0][0]["tokens"]) == 2

@@ -283,10 +283,32 @@ def test_modality_archs_rejected_up_front():
         serve.Scheduler(cfg, None, capacity=1, max_len=8)
 
 
-def test_slots_recycled_across_requests(setup):
+def test_pages_recycled_across_requests(setup):
+    """Paged mode: every page allocated for a request is returned to the
+    pool once it finishes — no leaks across a multi-request trace."""
     cfg, params = setup
     rng = np.random.default_rng(8)
     sched = serve.Scheduler(cfg, params, capacity=2, max_len=24)
+    assert sched.paged
+    trace = [serve.Request(rid=i, prompt=_prompt(rng, 6), max_new_tokens=2,
+                           arrival_time=0.0) for i in range(5)]
+    serve.Server(sched).run(trace)
+    # 6-token prompts fit one page; each request allocates exactly one
+    assert sched.pool.stats.allocated == 5
+    assert sched.pool.stats.freed == 5
+    assert sched.pool.stats.forks == 5          # one CoW fork per request
+    assert sched.pool.free_count == sched.num_pages
+    assert sched.pool.reserved_count == 0       # reservations all released
+    sched.store.assert_balanced([])
+
+
+def test_slots_recycled_legacy_mode(setup):
+    """Slot mode (paged=False, per-member prefill) keeps the historical
+    CachePool recycling behavior byte for byte."""
+    cfg, params = setup
+    rng = np.random.default_rng(8)
+    sched = serve.Scheduler(cfg, params, capacity=2, max_len=24,
+                            paged=False, shared_prefill=False)
     trace = [serve.Request(rid=i, prompt=_prompt(rng, 6), max_new_tokens=2,
                            arrival_time=0.0) for i in range(5)]
     serve.Server(sched).run(trace)
