@@ -1,0 +1,247 @@
+"""Online pattern-distribution search: Alg. 1 as a *trained* quantity.
+
+The offline story (core/search.py) runs Algorithm 1 once, at plan
+construction, and the per-layer K distribution never adapts to the loss it
+is supposed to protect.  ``OnlineSearch`` closes that loop: every
+``resync_every`` steps it warm-restarts Alg. 1 from the current logits
+``v`` (``resume_search``), driven by
+
+* an EMA of the train loss (global + per-dp bucket) — layers drift toward
+  cheaper patterns (higher dropout rate) only while the loss EMA stays
+  within ``loss_tolerance`` of the best EMA seen, and back off otherwise;
+* the equivalence residual from ``core/equivalence.py`` — a re-searched
+  layer distribution whose exact per-unit drop marginal is non-uniform or
+  misses its target rate by more than ``residual_tol`` is REJECTED and the
+  layer keeps its previous distribution.
+
+Compile-cache contract (DESIGN.md §14): the controller never mints new
+buckets.  ``plan0`` declares the frozen superset — ``warm_start()``
+precompiles ``plan0.buckets()`` and the RecompileWatchdog freezes it — and
+every resync produces ``plan0.with_dist(...)``, which raises
+``BucketSupersetViolation`` if the new support escapes.  Re-weighting
+within the superset binds to the exact same executables, so a resync never
+recompiles on the hot path.  ``resume_search`` itself traces the moving
+target rate, so even the search loop is ONE executable across all resyncs
+and layers.
+
+State (``state_arrays``/``load_state``) is a flat dict of fixed-shape
+arrays, carried in ``TrainState.extras`` through the jitted step (identity
+pass-through) and through elastic checkpoints — a restored run resyncs to
+bitwise-identical distributions and therefore draws the same buckets as an
+uninterrupted run from the same step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .equivalence import exact_unit_drop_marginals
+from .search import SearchConfig, resume_search
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineSearchConfig:
+    """Knobs for the between-steps re-search controller."""
+
+    resync_every: int = 50      # steps between warm-restarted searches
+    ema_beta: float = 0.9       # train-loss EMA decay
+    loss_tolerance: float = 0.5  # EMA slack (absolute) before backing off
+    rate_step: float = 0.02     # per-resync target-rate drift (deepest layer)
+    max_rate_delta: float = 0.15  # total drift bound around the initial rate
+    residual_tol: float = 0.05  # max |marginal − target| to accept a layer
+    search_iters: int = 2000    # Alg. 1 iteration cap per resync
+    lam1: float = 0.95          # fit weight for resync searches
+    lam2: float = 0.05          # entropy weight (lam1 + lam2 = 1)
+    seed: int = 0               # logit-init jitter seed
+
+    def __post_init__(self):
+        if self.resync_every < 1:
+            raise ValueError(f"resync_every must be >= 1, "
+                             f"got {self.resync_every}")
+        if not 0.0 < self.ema_beta < 1.0:
+            raise ValueError(f"ema_beta must be in (0,1), got {self.ema_beta}")
+        if self.rate_step < 0 or self.max_rate_delta < 0:
+            raise ValueError("rate_step/max_rate_delta must be >= 0")
+        if self.search_iters < 1:
+            raise ValueError("search_iters must be >= 1")
+
+
+class OnlineSearch:
+    """Per-layer K distributions, re-searched online within a frozen superset.
+
+    ``plan0`` is the plan whose ``support()``/``buckets()`` define the
+    frozen bucket universe; ``n_layers`` per-layer logit rows drift at
+    depth-scaled speed (deeper layers drift faster, LayerDrop-style).  The
+    trainer dispatches ONE (dp, bias) per step, so ``current_dist()`` is
+    the layer-mean distribution — per-layer rates remain the search/report
+    granularity.
+
+    Protocol: ``observe(step, loss, dp, bias)`` after every train step;
+    when ``should_resync(step)`` fires, ``resync(step)`` returns the
+    re-distributed plan (``plan0.with_dist``).  Resync is a deterministic
+    function of (config seed, observed losses, step) — no RNG draws.
+    """
+
+    def __init__(self, plan0, n_layers: int = 1,
+                 cfg: Optional[OnlineSearchConfig] = None, registry=None):
+        self.plan0 = plan0
+        self.cfg = cfg if cfg is not None else OnlineSearchConfig()
+        self.registry = registry
+        self.n_layers = max(1, int(n_layers))
+        self.support = tuple(plan0.support())
+        self.superset = frozenset(plan0.buckets())
+        n = plan0.n_patterns
+        L = self.n_layers
+        # logits init = log K0 + a small seeded jitter (same role as the
+        # search_distribution init noise: breaks ties deterministically)
+        v0 = np.log(np.clip(np.asarray(plan0.dist, np.float64), 1e-8, None))
+        jitter = 1e-3 * np.random.default_rng(self.cfg.seed).normal(
+            size=(L, n))
+        self.v = (v0[None, :] + jitter).astype(np.float32)
+        self.k = np.tile(np.asarray(plan0.dist, np.float32), (L, 1))
+        p0 = plan0.expected_rate()
+        self.p = np.full(L, p0, np.float32)
+        rates = [(dp - 1) / dp for dp in self.support]
+        # achievable-rate bounds: the frozen support caps how cheap/dense
+        # the distribution can get; max_rate_delta bounds the total drift
+        self.p_min = max(min(rates), p0 - self.cfg.max_rate_delta)
+        self.p_max = min(max(rates), p0 + self.cfg.max_rate_delta)
+        self.ema: Optional[float] = None       # train-loss EMA
+        self.baseline: Optional[float] = None  # best EMA seen at a resync
+        self.bucket_ema = np.full(n, np.nan, np.float32)  # per-dp loss EMA
+        self.resyncs = 0
+        self.resync_log: list[dict] = []
+
+    # ---- observation -------------------------------------------------------
+    def observe(self, step: int, loss: float, dp: int, bias: int) -> None:
+        """Fold one train step's loss into the global and per-dp EMAs.
+
+        EMAs are kept at float32 precision — the dtype they checkpoint at
+        (``state_arrays``) — so a restored run's EMA trajectory is bitwise
+        identical to an uninterrupted one."""
+        loss = float(loss)
+        b = self.cfg.ema_beta
+        ema = loss if self.ema is None else b * self.ema + (1 - b) * loss
+        self.ema = float(np.float32(ema))
+        i = int(dp) - 1
+        prev = float(self.bucket_ema[i])
+        self.bucket_ema[i] = loss if np.isnan(prev) \
+            else b * prev + (1 - b) * loss
+
+    def should_resync(self, step: int) -> bool:
+        """True when the step just completed closes a resync window."""
+        return self.ema is not None \
+            and (int(step) + 1) % self.cfg.resync_every == 0
+
+    # ---- resync ------------------------------------------------------------
+    def _search_cfg(self, target: float) -> SearchConfig:
+        it = self.cfg.search_iters
+        return SearchConfig(target_rate=float(target),
+                            n_patterns=self.plan0.n_patterns,
+                            lam1=self.cfg.lam1, lam2=self.cfg.lam2,
+                            min_iters=min(200, it), max_iters=it,
+                            allowed=self.support)
+
+    def _residual(self, k: np.ndarray, target: float) -> float:
+        """Equivalence residual of a candidate layer distribution: the
+        exact per-unit drop marginal must be uniform and hit the target."""
+        try:
+            m = exact_unit_drop_marginals(k, dim=self.plan0.nb, block=1,
+                                          family=self.plan0.family)
+        except ValueError:
+            return float("inf")
+        if float(np.max(np.abs(m - m[0]))) > 1e-6:
+            return float("inf")
+        return abs(float(m[0]) - float(target))
+
+    def resync(self, step: int):
+        """Warm-restart Alg. 1 per layer; returns the re-distributed plan.
+
+        Deterministic in the controller state (no RNG): the loss-permits
+        branch compares the loss EMA against the best resync-time EMA with
+        ``loss_tolerance`` slack, then each layer's target rate drifts by
+        ``rate_step`` scaled by relative depth (deeper → faster).  A layer
+        whose searched distribution fails the equivalence residual keeps
+        its previous (v, K, p) — the update is rejected, not clamped.
+        """
+        if self.ema is None:
+            raise RuntimeError("resync() before any observe()")
+        cheapen = self.baseline is None \
+            or self.ema <= self.baseline + self.cfg.loss_tolerance
+        direction = 1.0 if cheapen else -1.0
+        layers = []
+        for layer in range(self.n_layers):
+            depth = (layer + 1) / self.n_layers
+            target = float(np.clip(
+                self.p[layer] + direction * self.cfg.rate_step * depth,
+                self.p_min, self.p_max))
+            v_new, k_new, s_loss, iters = resume_search(
+                self.v[layer], self._search_cfg(target))
+            residual = self._residual(k_new, target)
+            accepted = residual <= self.cfg.residual_tol
+            if accepted:
+                self.v[layer] = v_new
+                self.k[layer] = k_new
+                self.p[layer] = target
+            if self.registry is not None:
+                lbl = {"layer": layer}
+                self.registry.gauge("search_rate", lbl).set(
+                    float(self.p[layer]))
+                self.registry.gauge("search_loss", lbl).set(s_loss)
+            layers.append({"layer": layer, "target_rate": target,
+                           "search_loss": s_loss, "iters": iters,
+                           "residual": residual, "accepted": accepted})
+        self.baseline = self.ema if self.baseline is None \
+            else min(self.baseline, self.ema)
+        plan = self.plan0.with_dist(self.current_dist())
+        self.resyncs += 1
+        rec = {"step": int(step), "resync": self.resyncs,
+               "ema_loss": float(self.ema), "cheapen": cheapen,
+               "dist": [float(x) for x in plan.dist],
+               "expected_rate": plan.expected_rate(),
+               "flop_fraction": plan.expected_flop_fraction(),
+               "layers": layers}
+        self.resync_log.append(rec)
+        if self.registry is not None:
+            self.registry.counter("online_search_resyncs_total").inc()
+            self.registry.gauge("search_expected_speedup").set(
+                1.0 / plan.expected_flop_fraction())
+        return plan
+
+    # ---- views -------------------------------------------------------------
+    def current_dist(self) -> np.ndarray:
+        """Layer-mean distribution — what the trainer dispatches from."""
+        d = np.clip(self.k.astype(np.float64).mean(axis=0), 0.0, None)
+        return d / d.sum()
+
+    # ---- checkpoint state --------------------------------------------------
+    # EMAs encode None as +inf; every array has a fixed shape so the state
+    # rides in TrainState.extras through jit without retracing.
+    def state_arrays(self) -> dict:
+        ema = np.inf if self.ema is None else self.ema
+        base = np.inf if self.baseline is None else self.baseline
+        return {"v": self.v.copy(), "k": self.k.copy(), "p": self.p.copy(),
+                "ema": np.asarray([ema, base], np.float32),
+                "bucket_ema": self.bucket_ema.copy()}
+
+    def load_state(self, arrays: dict) -> None:
+        """Restore from ``state_arrays()`` output (e.g. a checkpoint).
+
+        Leaves are copied: a checkpoint hands back (possibly read-only,
+        zero-copy) device arrays, and the controller mutates its state
+        arrays in place."""
+        L, n = self.n_layers, self.plan0.n_patterns
+        v = np.array(arrays["v"], np.float32)
+        if v.shape != (L, n):
+            raise ValueError(f"search state v has shape {v.shape}, "
+                             f"expected ({L}, {n})")
+        self.v = v
+        self.k = np.array(arrays["k"], np.float32).reshape(L, n)
+        self.p = np.array(arrays["p"], np.float32).reshape(L)
+        ema, base = np.asarray(arrays["ema"], np.float64)
+        self.ema = None if not np.isfinite(ema) else float(ema)
+        self.baseline = None if not np.isfinite(base) else float(base)
+        self.bucket_ema = np.array(arrays["bucket_ema"],
+                                   np.float32).reshape(n)

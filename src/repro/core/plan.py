@@ -59,6 +59,16 @@ class MeshDivisibilityError(ValueError):
     with an actionable message instead."""
 
 
+class BucketSupersetViolation(ValueError):
+    """An online redistribution escaped the plan's frozen bucket superset.
+
+    ``DropoutPlan.with_dist`` only reweights within the (dp, bias) universe
+    that ``warm_start()`` precompiled and the RecompileWatchdog froze
+    (DESIGN.md §14).  Putting probability mass on a period outside that
+    superset would mint a new executable on the hot path, so it raises this
+    instead of recompiling."""
+
+
 # ==========================================================================
 # Backend registry
 # ==========================================================================
@@ -697,6 +707,31 @@ class DropoutPlan:
     def with_nb(self, nb: int) -> "DropoutPlan":
         """The same plan with the pattern-block count pinned to ``nb``."""
         return dataclasses.replace(self, nb=nb)
+
+    def with_dist(self, dist) -> "DropoutPlan":
+        """A cheap re-distributed view sharing this plan's bucket universe.
+
+        Online search (DESIGN.md §14) reweights K between steps; because
+        ``BoundPlan`` does not depend on ``dist``, the new view ``bind``s to
+        the exact same executables — re-weighting NEVER recompiles.  The new
+        distribution must live inside this plan's frozen ``support()``
+        superset (same length, no probability mass on a dp this plan could
+        not produce); escaping it would mint an unseen (dp, bias) bucket on
+        the hot path, so that raises ``BucketSupersetViolation`` instead.
+        """
+        d = np.asarray(dist, np.float64)
+        if d.shape != (self.n_patterns,):
+            raise BucketSupersetViolation(
+                f"with_dist: distribution has shape {d.shape}, the frozen "
+                f"bucket universe is over {self.n_patterns} periods")
+        escaped = [i + 1 for i, k in enumerate(d)
+                   if k > 1e-9 and (i + 1) not in self.support()]
+        if escaped:
+            raise BucketSupersetViolation(
+                f"with_dist: new support {escaped} escapes the frozen "
+                f"superset {self.support()} — precompiled buckets cover "
+                f"only the superset; reweight within it instead")
+        return dataclasses.replace(self, dist=tuple(d.tolist()))
 
 
 # ==========================================================================

@@ -13,6 +13,13 @@ The paper runs this once per (layer, target-rate) before training — a
 one-time host-side cost.  We implement it as a jit'd JAX loop (lax.while_loop
 on the loss delta) so it is also differentiable/testable, plus a closed-form
 sanity initializer used as a warm start.
+
+Online search (``core/online_search.py``) re-runs Algorithm 1 *during*
+training via ``resume_search``: the optimizer warm-restarts from the
+previous resync's logits ``v`` against a moving target rate.  The target
+is a traced operand of the jitted loop (the static jit key pins it to 0),
+so every resync of every layer reuses ONE compiled search executable —
+re-searching never recompiles, on or off the hot path.
 """
 from __future__ import annotations
 
@@ -52,11 +59,11 @@ def pattern_rates(n: int) -> jnp.ndarray:
     return (i - 1.0) / i
 
 
-def _loss_fn(v, p_u, mask, cfg: SearchConfig):
+def _loss_fn(v, p_u, mask, target, cfg: SearchConfig):
     # Restricted support: disallowed periods get -inf logits.
     logits = jnp.where(mask, v, -jnp.inf)
     d = jax.nn.softmax(logits)
-    e_p = jnp.square(jnp.vdot(d, p_u) - cfg.target_rate)
+    e_p = jnp.square(jnp.vdot(d, p_u) - target)
     # entropy term only over the support (0·log0 := 0)
     safe = jnp.where(mask & (d > 0), d, 1.0)
     e_n = jnp.sum(jnp.where(mask, d * jnp.log(safe), 0.0)) / p_u.shape[0]
@@ -64,7 +71,9 @@ def _loss_fn(v, p_u, mask, cfg: SearchConfig):
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def _search_jit(v0, p_u, mask, cfg: SearchConfig):
+def _search_jit(v0, p_u, mask, target, cfg: SearchConfig):
+    # ``target`` is traced (cfg.target_rate is zeroed in the static key) so
+    # online resyncs against a moving target reuse this one executable
     grad_fn = jax.value_and_grad(_loss_fn)
 
     def cond(state):
@@ -76,39 +85,66 @@ def _search_jit(v0, p_u, mask, cfg: SearchConfig):
 
     def body(state):
         v, mom, prev_loss, loss, it = state
-        new_loss, g = grad_fn(v, p_u, mask, cfg)
+        new_loss, g = grad_fn(v, p_u, mask, target, cfg)
         # SGD with momentum (Alg. 1 line 9; momentum for convergence speed)
         mom = cfg.momentum * mom + jnp.where(mask, g, 0.0)
         v_new = v - cfg.lr * mom
         return (v_new, mom, loss, new_loss, it + 1)
 
-    loss0, _ = grad_fn(v0, p_u, mask, cfg)
+    loss0, _ = grad_fn(v0, p_u, mask, target, cfg)
     state = (v0, jnp.zeros_like(v0), jnp.inf, loss0, jnp.int32(0))
     v, _, _, loss, iters = jax.lax.while_loop(cond, body, state)
     d = jax.nn.softmax(jnp.where(mask, v, -jnp.inf))
-    return d, loss, iters
+    return v, d, loss, iters
+
+
+def support_mask(cfg: SearchConfig) -> np.ndarray:
+    """[N] bool mask of allowed periods (all-true when unrestricted)."""
+    n = cfg.n_patterns
+    if cfg.allowed is None:
+        return np.ones(n, bool)
+    mask = np.zeros(n, bool)
+    for dp in cfg.allowed:
+        if not (1 <= dp <= n):
+            raise ValueError(f"allowed period {dp} outside 1..{n}")
+        mask[dp - 1] = True
+    if not mask.any():
+        raise ValueError("empty allowed-period set")
+    return mask
+
+
+def _run(v0, cfg: SearchConfig):
+    mask = jnp.asarray(support_mask(cfg))
+    # hold the jit key constant across moving targets: the real target is
+    # the traced operand, the static cfg always carries target_rate=0
+    static = dataclasses.replace(cfg, target_rate=0.0)
+    return _search_jit(v0, pattern_rates(cfg.n_patterns), mask,
+                       jnp.float32(cfg.target_rate), static)
 
 
 def search_distribution(cfg: SearchConfig, seed: int = 0):
     """Run Algorithm 1.  Returns (K, loss, iters) with K a [N] numpy array."""
-    n = cfg.n_patterns
-    p_u = pattern_rates(n)
-    if cfg.allowed is not None:
-        mask = np.zeros(n, bool)
-        for dp in cfg.allowed:
-            if not (1 <= dp <= n):
-                raise ValueError(f"allowed period {dp} outside 1..{n}")
-            mask[dp - 1] = True
-        if not mask.any():
-            raise ValueError("empty allowed-period set")
-    else:
-        mask = np.ones(n, bool)
-    mask = jnp.asarray(mask)
-
     # Warm start near the closed-form two-point solution to speed convergence.
-    v0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (n,))
-    d, loss, iters = _search_jit(v0, p_u, mask, cfg)
+    v0 = 0.01 * jax.random.normal(jax.random.PRNGKey(seed), (cfg.n_patterns,))
+    _, d, loss, iters = _run(v0, cfg)
     return np.asarray(d), float(loss), int(iters)
+
+
+def resume_search(v0, cfg: SearchConfig):
+    """Warm-restart Algorithm 1 from the logits of a previous search.
+
+    The incremental API behind ``core/online_search.py``: ``v0`` is the
+    ``[N]`` logit vector a previous call returned (or any initializer), and
+    the search resumes SGD+momentum from it against ``cfg.target_rate``.
+    Returns ``(v, K, loss, iters)`` — ``v`` feeds the next resume, ``K`` is
+    the searched distribution restricted to ``cfg.allowed``.
+    """
+    v0 = jnp.asarray(v0, jnp.float32)
+    if v0.shape != (cfg.n_patterns,):
+        raise ValueError(f"v0 must have shape ({cfg.n_patterns},), "
+                         f"got {v0.shape}")
+    v, d, loss, iters = _run(v0, cfg)
+    return np.asarray(v), np.asarray(d), float(loss), int(iters)
 
 
 def expected_rate(k: np.ndarray) -> float:

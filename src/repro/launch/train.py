@@ -26,6 +26,7 @@ from pathlib import Path
 import jax
 
 from repro.configs import get_spec, normalize
+from repro.core.online_search import OnlineSearchConfig
 from repro.core.plan import FAMILIES, build_plan, identity_plan
 from repro.data.pipeline import SyntheticLMData
 from repro.launch.mesh import make_host_mesh, mesh_from_spec
@@ -80,6 +81,14 @@ def main(argv=None):
                     help="precompile every plan bucket before step 0 "
                          "(also gauges per-bucket FLOPs/bytes from the "
                          "compiled HLO and freezes the recompile watchdog)")
+    ap.add_argument("--online-search", action="store_true",
+                    help="re-run Alg. 1 during training (core.online_search"
+                         ".OnlineSearch): per-layer K distributions drift "
+                         "toward cheaper patterns while the loss EMA "
+                         "permits, reweighting within the frozen bucket "
+                         "superset (DESIGN.md §14)")
+    ap.add_argument("--resync-every", type=int, default=50,
+                    help="steps between online-search warm restarts")
     args = ap.parse_args(argv)
 
     spec = get_spec(normalize(args.arch))
@@ -110,9 +119,15 @@ def main(argv=None):
     mesh = (mesh_from_spec(args.mesh_shape) if args.mesh_shape
             else make_host_mesh())
     obs = Observability.create(trace_path=args.trace, plan=plan)
+    osearch = None
+    if args.online_search:
+        if args.dropout <= 0:
+            ap.error("--online-search needs --dropout > 0 (a searched plan)")
+        osearch = OnlineSearchConfig(resync_every=args.resync_every,
+                                     seed=args.seed)
     trainer = DistributedTrainer(cfg, AdamW(), params, mesh=mesh,
                                  profile=args.profile, plan=plan, tcfg=tcfg,
-                                 obs=obs)
+                                 obs=obs, online_search=osearch)
     print(f"mesh {dict(mesh.shape)} profile {args.profile} "
           f"buckets {trainer.plan.buckets()}", flush=True)
     if args.warm_start:
@@ -126,6 +141,16 @@ def main(argv=None):
         print(f"pattern drift: {drift['verdict']} "
               f"(max dev {drift['max_abs_deviation']:.4f} over "
               f"{drift['samples']} draws)")
+    if trainer.online_search is not None:
+        ctl = trainer.online_search
+        print(f"online search: {ctl.resyncs} resyncs, "
+              f"rate {plan.expected_rate():.3f} -> "
+              f"{trainer.plan.expected_rate():.3f}, "
+              f"E[1/dp] {trainer.plan.expected_flop_fraction():.3f}")
+        for rec in ctl.resync_log:
+            print(f"  resync@{rec['step']}: ema={rec['ema_loss']:.4f} "
+                  f"rate={rec['expected_rate']:.3f} "
+                  f"drift={rec.get('drift_verdict', 'n/a')}")
     if obs.watchdog.violation_count:
         print(f"RECOMPILE VIOLATIONS: {obs.watchdog.violation_count}")
     if args.trace:

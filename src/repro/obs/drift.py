@@ -57,6 +57,24 @@ class DriftMonitor:
         """Record a ``BoundPlan`` draw (``plan.sample(step)``'s output)."""
         self.observe(bound.dp, bound.bias)
 
+    def retarget(self, plan) -> None:
+        """Point the monitor at a re-distributed plan (online search).
+
+        Every resync changes the target K, so the draws observed under the
+        old distribution are no longer evidence about the new one — the
+        observation window resets along with the per-bucket targets
+        (DESIGN.md §14).  The frozen-superset contract means the new
+        bucket set is always a subset of the old universe.
+        """
+        self.plan = plan
+        self.expected = {(dp, b): plan.dist[dp - 1] / dp
+                         for dp, b in plan.buckets()}
+        self.counts = {}
+        self.total = 0
+        self.unexpected = {}
+        if self.registry is not None:
+            self.registry.counter("pattern_drift_retargets_total").inc()
+
     # ---- verdict -----------------------------------------------------------
     def report(self, min_samples: int = 50) -> dict:
         """Per-bucket deviations + chi-square/KL + an overall verdict.

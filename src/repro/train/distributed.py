@@ -39,10 +39,13 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PSpec
 
 from repro.core import plan as plan_mod
-from repro.core.plan import DropoutPlan, identity_plan
+from repro.core.online_search import OnlineSearch, OnlineSearchConfig
+from repro.core.plan import (BucketSupersetViolation, DropoutPlan,
+                             identity_plan)
 from repro.launch.mesh import make_host_mesh
 from repro.obs import Observability, bucket_labels
 from repro.models.transformer import (ModelConfig, batch_logical_axes,
@@ -60,19 +63,27 @@ from repro.train.train_step import make_train_step
 # --------------------------------------------------------------------------
 
 @functools.partial(jax.tree_util.register_dataclass,
-                   data_fields=("params", "opt", "step"), meta_fields=())
+                   data_fields=("params", "opt", "step", "extras"),
+                   meta_fields=())
 @dataclasses.dataclass
 class TrainState:
     """Training state pytree: model params + optimizer state + step counter.
 
-    Registered as a pytree (all three fields are data), so it jits,
-    donates, shards and checkpoints as one object.  Use
+    Registered as a pytree (all fields are data), so it jits, donates,
+    shards and checkpoints as one object.  Use
     ``state_logical_axes``/``state_shardings`` for its sharding twin.
+
+    ``extras`` holds auxiliary host-managed state that must ride through
+    the jitted step untouched (identity pass-through) and survive elastic
+    checkpoints — today the online-search logits/EMAs (DESIGN.md §14).  An
+    empty dict contributes zero pytree leaves, so states and checkpoints
+    written without extras stay layout-compatible.
     """
 
     params: object
     opt: object
     step: object
+    extras: dict = dataclasses.field(default_factory=dict)
 
 
 def state_logical_axes(params, params_axes, abstract_opt) -> TrainState:
@@ -101,13 +112,14 @@ def state_logical_axes(params, params_axes, abstract_opt) -> TrainState:
 
 
 def state_shardings(params, params_axes, abstract_opt, mesh,
-                    rules: ShardingRules) -> TrainState:
+                    rules: ShardingRules, extras=None) -> TrainState:
     """NamedSharding twin of a TrainState under one mesh + profile.
 
     Params follow the profile's param rules; optimizer tensors additionally
     get ZeRO-1 'data'-axis partitioning on their first free divisible dim
     (``zero1_opt_sharding`` — classic optimizer-state sharding); the step
-    counter is replicated.
+    counter and every ``extras`` leaf (tiny host-managed arrays) are
+    replicated.
     """
     state_ax = state_logical_axes(params, params_axes, abstract_opt)
     p_sh = param_shardings(params, params_axes, mesh, rules)
@@ -117,8 +129,9 @@ def state_shardings(params, params_axes, abstract_opt, mesh,
         return zero1_opt_sharding(base, leaf.shape)
 
     o_sh = jax.tree.map(opt_sh, abstract_opt, state_ax.opt)
-    return TrainState(params=p_sh, opt=o_sh,
-                      step=NamedSharding(mesh, PSpec()))
+    repl = NamedSharding(mesh, PSpec())
+    return TrainState(params=p_sh, opt=o_sh, step=repl,
+                      extras=jax.tree.map(lambda _: repl, extras or {}))
 
 
 # --------------------------------------------------------------------------
@@ -215,7 +228,9 @@ class DistributedTrainer:
                  mesh=None, profile: str | ShardingRules = "tp",
                  plan: Optional[DropoutPlan] = None,
                  tcfg: Optional[TrainerConfig] = None,
-                 params_axes=None, obs: Optional[Observability] = None):
+                 params_axes=None, obs: Optional[Observability] = None,
+                 online_search: OnlineSearchConfig | OnlineSearch
+                 | None = None):
         self.cfg = cfg
         self.optimizer = optimizer
         self.mesh = mesh if mesh is not None else make_host_mesh()
@@ -249,19 +264,45 @@ class DistributedTrainer:
         # default in the signature would be one shared mutable config
         self.tcfg = tcfg if tcfg is not None else TrainerConfig()
 
+        # observability: pass a preconfigured bundle (e.g. with tracing on)
+        # or get the always-on default (registry + watchdog, no trace file)
+        self.obs = obs if obs is not None \
+            else Observability.create(plan=self.plan)
+
+        # ---- online search (DESIGN.md §14) --------------------------------
+        # ``plan0`` declares the frozen bucket superset: warm_start
+        # precompiles it, the watchdog freezes it, and every resync's
+        # ``with_dist`` view may only reweight within it.
+        self.plan0 = self.plan
+        self._superset = frozenset(self.plan0.buckets())
+        if isinstance(online_search, OnlineSearch):
+            self.online_search: Optional[OnlineSearch] = online_search
+        elif online_search is not None:
+            self.online_search = OnlineSearch(
+                self.plan0, n_layers=max(1, cfg.n_layers),
+                cfg=online_search, registry=self.obs.registry)
+        else:
+            self.online_search = None
+        extras = {}
+        if self.online_search is not None:
+            extras = {"search": jax.tree.map(
+                jnp.asarray, self.online_search.state_arrays())}
+
         # ---- shard the state onto the mesh --------------------------------
         if params_axes is None:
             params_axes = init_lm(cfg)[1]
         abstract_opt = jax.eval_shape(optimizer.init, params)
         self.state_sh = state_shardings(params, params_axes, abstract_opt,
-                                        self.mesh, self.rules)
+                                        self.mesh, self.rules,
+                                        extras=extras)
         params = jax.device_put(params, self.state_sh.params)
         # init the opt state directly into its ZeRO-1 sharding (never
         # materializes replicated moments)
         opt_state = jax.jit(optimizer.init,
                             out_shardings=self.state_sh.opt)(params)
         self.state = TrainState(params=params, opt=opt_state,
-                                step=jnp.zeros((), jnp.int32))
+                                step=jnp.zeros((), jnp.int32),
+                                extras=extras)
         # f32 grad-accumulation buffers share the ZeRO-1 layout (the
         # acc_shardings hook of make_train_step)
         self._acc_sh = jax.tree.map(
@@ -272,11 +313,7 @@ class DistributedTrainer:
                                      self.tcfg.steps)
         self._buckets: dict[tuple, Callable] = {}
         self._batch_sh = None
-        # observability: pass a preconfigured bundle (e.g. with tracing on)
-        # or get the always-on default (registry + watchdog, no trace file)
-        self.obs = obs if obs is not None \
-            else Observability.create(plan=self.plan)
-        self.obs.watchdog.expect(self.plan.buckets())
+        self.obs.watchdog.expect(self.plan0.buckets())
         self.watchdog = StragglerWatchdog()
         self.async_ckpt = ckpt_lib.AsyncCheckpointer()
         self.start_step = 0
@@ -319,8 +356,10 @@ class DistributedTrainer:
 
             def step(state, b, lr):
                 p, o, metrics = base(state.params, state.opt, b, lr)
-                return TrainState(params=p, opt=o,
-                                  step=state.step + 1), metrics
+                # extras are host-managed: identity pass-through keeps the
+                # search state inside the donated/checkpointed pytree
+                return TrainState(params=p, opt=o, step=state.step + 1,
+                                  extras=state.extras), metrics
 
             repl = NamedSharding(self.mesh, PSpec())
             self._buckets[key] = jax.jit(
@@ -350,7 +389,7 @@ class DistributedTrainer:
         batch = jax.tree.map(jnp.asarray, batch_fn(0))
         tracer = self.obs.tracer
         with set_mesh_and_rules(self.mesh, self.rules):
-            for dp, b in self.plan.buckets():
+            for dp, b in self.plan0.buckets():
                 fn = self._step_fn(dp, b, batch)
                 scratch = jax.tree.map(jnp.copy, self.state)
                 with tracer.span("compile", dp=dp, bias=b):
@@ -404,12 +443,50 @@ class DistributedTrainer:
         if restored is not None:
             self.state = restored
             self.start_step = step + 1
+            if self.online_search is not None:
+                ext = getattr(self.state, "extras", None) or {}
+                if "search" in ext:
+                    # restore logits + EMAs, then re-derive the dispatch
+                    # distribution so the resumed run draws the same
+                    # buckets as an uninterrupted one from this step
+                    self.online_search.load_state(
+                        jax.tree.map(np.asarray, ext["search"]))
+                    self._set_plan(self.plan0.with_dist(
+                        self.online_search.current_dist()))
 
     def _maybe_checkpoint(self, step: int, force: bool = False):
         if not self.tcfg.ckpt_dir:
             return
         if force or (step + 1) % self.tcfg.ckpt_every == 0:
             self.async_ckpt.save_async(self.tcfg.ckpt_dir, step, self.state)
+
+    # ---- online search -----------------------------------------------------
+    def _set_plan(self, plan: DropoutPlan) -> None:
+        """Swap in a re-distributed plan view and retarget the drift
+        monitor's expectations (its observation window resets with the
+        target).  The bucket universe is unchanged by construction."""
+        self.plan = plan
+        if self.obs.drift is not None:
+            self.obs.drift.retarget(plan)
+
+    def _search_hook(self, step: int, rec: dict, tracer) -> None:
+        """Post-step online-search protocol: fold the loss into the EMAs,
+        resync at window boundaries, and mirror the controller state into
+        ``TrainState.extras`` so the next checkpoint carries it."""
+        ctl = self.online_search
+        ctl.observe(step, rec["loss"], rec["dp"], rec["bias"])
+        if ctl.should_resync(step):
+            drift_rep = None
+            if self.obs.drift is not None:
+                drift_rep = self.obs.drift.report(
+                    min_samples=min(50, ctl.cfg.resync_every))
+            with tracer.span("search_resync", step=step):
+                new_plan = ctl.resync(step)
+            if drift_rep is not None:
+                ctl.resync_log[-1]["drift_verdict"] = drift_rep["verdict"]
+            self._set_plan(new_plan)
+        self.state.extras["search"] = jax.tree.map(
+            jnp.asarray, ctl.state_arrays())
 
     # ---- the loop ----------------------------------------------------------
     def run(self, batch_fn: Callable[[int], dict],
@@ -421,6 +498,14 @@ class DistributedTrainer:
         with set_mesh_and_rules(self.mesh, self.rules):
             for step in range(self.start_step, until):
                 bound = self.plan.sample(step)
+                if (bound.dp, bound.bias) not in self._superset:
+                    # defense in depth: with_dist already forbids support
+                    # escapes, so an off-superset draw means state
+                    # corruption — raise rather than compile on the hot path
+                    raise BucketSupersetViolation(
+                        f"sampled bucket (dp={bound.dp}, bias={bound.bias})"
+                        f" outside the frozen superset "
+                        f"{sorted(self._superset)}")
                 if self.obs.drift is not None:
                     self.obs.drift.observe_bound(bound)
                 with tracer.span("data", step=step):
@@ -445,6 +530,8 @@ class DistributedTrainer:
                        "dp": bound.dp, "bias": bound.bias, "dt": dt,
                        "straggler": slow}
                 self.history.append(rec)
+                if self.online_search is not None:
+                    self._search_hook(step, rec, tracer)
                 if step % self.tcfg.log_every == 0:
                     print(f"step {step}: loss={rec['loss']:.4f} "
                           f"dp={bound.dp} dt={dt*1e3:.0f}ms"

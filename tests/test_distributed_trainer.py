@@ -259,3 +259,68 @@ def test_mlp_rdp_rejects_non_divisible_width():
     out = mlp_apply_rdp(params, x, (4,), (1,), block=1)  # 12 % 4 == 0
     assert out.shape == (2, 10)
     assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_online_search_state_survives_elastic_restore(tmp_path):
+    """ISSUE 9 elastic contract: search logits + loss EMA ride in
+    TrainState.extras through a sharded checkpoint and re-shard on a
+    DIFFERENT mesh topology (2x4 -> 4x2); the resumed run resyncs to
+    bitwise-identical distributions and therefore draws exactly the same
+    (dp, bias) buckets as an uninterrupted run."""
+    run_in_devices(8, f"""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke
+        from repro.core.online_search import OnlineSearchConfig
+        from repro.core.plan import build_plan
+        from repro.data.pipeline import SyntheticLMData
+        from repro.models import init_lm, materialize
+        from repro.optim.optimizers import AdamW
+        from repro.train.distributed import DistributedTrainer, TrainerConfig
+
+        cfg = dataclasses.replace(get_smoke("qwen2_1_5b"), dtype="float32")
+        params = materialize(jax.random.PRNGKey(1), init_lm(cfg)[0])
+        plan = build_plan("rdp", 0.5, nb=cfg.pattern_nb, dp_max=4,
+                          block=cfg.d_ff // cfg.pattern_nb, seed=0)
+        data = SyntheticLMData(vocab=cfg.vocab, seq_len=32, global_batch=8)
+
+        def mk(mesh, steps, ckpt):
+            return DistributedTrainer(
+                cfg, AdamW(), jax.tree.map(jnp.copy, params), mesh=mesh,
+                profile="tp", plan=plan,
+                tcfg=TrainerConfig(steps=steps, ckpt_every=2,
+                                   ckpt_dir=ckpt, log_every=1000),
+                online_search=OnlineSearchConfig(resync_every=2, seed=0))
+
+        ta = mk(jax.make_mesh((2, 4), ("data", "model")), 4,
+                r"{tmp_path}/elastic")
+        ha = ta.run(data.batch)
+        assert ta.online_search.resyncs == 2
+
+        # restart on a DIFFERENT topology
+        tb = mk(jax.make_mesh((4, 2), ("data", "model")), 8,
+                r"{tmp_path}/elastic")
+        tb.maybe_resume()
+        assert tb.start_step == 4
+        # search state restored bitwise: logits, EMAs, and the dispatch
+        # distribution the trainer resumes from
+        np.testing.assert_array_equal(tb.online_search.v, ta.online_search.v)
+        assert tb.online_search.ema == ta.online_search.ema
+        assert tb.online_search.baseline == ta.online_search.baseline
+        assert tb.plan.dist == ta.plan.dist
+        hb = tb.run(data.batch)
+        tb.obs.watchdog.assert_clean()
+
+        # uninterrupted reference (no checkpointing, original mesh)
+        tc = mk(jax.make_mesh((2, 4), ("data", "model")), 8, None)
+        hc = tc.run(data.batch)
+        assert tc.online_search.resyncs == 4
+        assert tb.online_search.resyncs == 2   # resyncs 3+4 post-restore
+
+        got = [(r["step"], r["dp"], r["bias"]) for r in ha + hb]
+        want = [(r["step"], r["dp"], r["bias"]) for r in hc]
+        assert got == want, (got, want)
+        assert tb.plan.dist == tc.plan.dist
+        assert tb.online_search.ema == tc.online_search.ema
+        print("online-search elastic ok")
+    """)

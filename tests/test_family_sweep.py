@@ -353,3 +353,38 @@ def test_bucket_universe_shared_across_families():
     for p in plans:
         for step in range(50):
             assert p.sample(step).bucket in p.buckets()
+
+
+# --------------------------------------------------------------------------
+# 5. online search × family: equivalence holds after mid-run redistribution
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ACTIVE_FAMILIES)
+def test_family_equivalence_after_online_redistribution(family):
+    """Drive the online-search controller through a couple of resyncs for
+    every family, then run the statistical-equivalence oracle against the
+    REDISTRIBUTED plan: the drifted K must still produce a uniform per-unit
+    drop marginal at its own expected rate, within the same frozen support
+    the original plan declared."""
+    from repro.core.online_search import OnlineSearch, OnlineSearchConfig
+
+    plan0 = build_plan(family, 0.5, nb=16, block=4, seed=0)
+    ctl = OnlineSearch(plan0, n_layers=2,
+                       cfg=OnlineSearchConfig(resync_every=8, seed=0,
+                                              search_iters=1000))
+    plan = plan0
+    for step in range(16):
+        b = plan.sample(step)
+        ctl.observe(step, 6.0 - 0.02 * step, b.dp, b.bias)
+        if ctl.should_resync(step):
+            plan = ctl.resync(step)
+    assert ctl.resyncs == 2
+    assert any(l["accepted"] for rec in ctl.resync_log
+               for l in rec["layers"]), f"{family}: every layer rejected"
+    assert set(plan.support()) <= set(plan0.support())
+    # the oracle validates the *new* distribution at the *drifted* rate
+    report = check_equivalence(plan, dim=64,
+                               target=plan.expected_rate(), steps=2000)
+    assert report["uniform"], report
+    assert report["rate_err"] < 0.025, report
+    assert report["mc_max_err"] < report["mc_tol"], report

@@ -411,3 +411,61 @@ def test_trainer_trains_end_to_end_with_pallas_backend():
     assert all(np.isfinite(h["loss"]) for h in hist)
     # at least one step actually used a compact (dp > 1) pattern
     assert any(h["dp"] > 1 for h in hist), [h["dp"] for h in hist]
+
+
+# --------------------------------------------------------------------------
+# Online search never recompiles: family × differentiable backend sweep
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family,backend", _differentiable_pairs())
+def test_online_search_zero_recompiles(family, backend):
+    """ISSUE 9's compile-cache contract at the kernel-dispatch level: warm
+    the frozen bucket superset once, then drive the online-search
+    controller through several redistributions while training through
+    jax.grad of apply_ffn — no draw may miss the per-bucket executable
+    cache (the trainer's bucketing), for every family × differentiable
+    backend."""
+    from repro.core.online_search import OnlineSearch, OnlineSearchConfig
+    from repro.core.plan import build_plan, get_family
+
+    fam = get_family(family)
+    nb, x, w_up, w_down, w_gate = _ffn_case(hash(family) % 83 + 2)
+    plan0 = build_plan(family, 0.4, nb=nb, dp_max=2, block=1,
+                       backend=backend, seed=0)
+
+    wd = RecompileWatchdog()
+    wd.expect(plan0.buckets())
+    cache = {}
+
+    def grads(dp, bias):
+        key = (dp, bias)
+        if key not in cache:
+            wd.record_compile(key)
+
+            def loss(wu, _dp=dp, _b=bias):
+                return (fam.apply_ffn(x, wu, w_down, w_gate, dp=_dp,
+                                      bias=_b, nb=nb, backend=backend,
+                                      act=jax.nn.silu) ** 2).sum()
+
+            cache[key] = jax.jit(jax.value_and_grad(loss))
+        return cache[key]
+
+    for dp, b in plan0.buckets():            # warm_start analogue
+        grads(dp, b)(w_up)
+    wd.freeze()
+
+    ctl = OnlineSearch(plan0, n_layers=2,
+                       cfg=OnlineSearchConfig(resync_every=4, seed=0,
+                                              search_iters=500))
+    plan = plan0
+    for step in range(12):
+        bound = plan.sample(step)
+        assert (bound.dp, bound.bias) in ctl.superset
+        loss_val, _ = grads(bound.dp, bound.bias)(w_up)
+        ctl.observe(step, float(loss_val) - 0.01 * step,
+                    bound.dp, bound.bias)
+        if ctl.should_resync(step):
+            plan = ctl.resync(step)
+    assert ctl.resyncs == 3
+    assert len(cache) == len(plan0.buckets())
+    wd.assert_clean()

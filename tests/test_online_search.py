@@ -1,0 +1,263 @@
+"""Property tests for the online pattern-distribution search (ISSUE 9).
+
+The controller contract, checked under randomized interleavings of
+observe/resync and random loss trajectories:
+
+1. **Simplex invariant** — every per-layer distribution and the dispatch
+   (layer-mean) distribution stay on the probability simplex after any
+   number of resyncs.
+2. **Support closure** — every post-resync draw lands inside the frozen
+   ``plan0.buckets()`` superset, whatever the resync/step interleaving;
+   ``with_dist`` raises ``BucketSupersetViolation`` rather than let mass
+   escape.
+3. **Determinism** — resync is a pure function of (config seed, observed
+   losses, step): identical trajectories produce bitwise-identical
+   distributions, and a state round-trip (``state_arrays``/``load_state``,
+   the checkpoint path) continues bitwise-identically.
+
+Runs under real hypothesis in CI and the deterministic fallback engine
+(tests/_hyp.py) locally.
+"""
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, strategies as st
+
+from repro.core.online_search import OnlineSearch, OnlineSearchConfig
+from repro.core.plan import BucketSupersetViolation, build_plan
+
+
+def _plan(target=0.5, dp_max=8, seed=0):
+    return build_plan("rdp", target, nb=8, dp_max=dp_max, block=1, seed=seed)
+
+
+def _cfg(resync_every=4, seed=0, **kw):
+    kw.setdefault("search_iters", 400)
+    return OnlineSearchConfig(resync_every=resync_every, seed=seed, **kw)
+
+
+def _drive(ctl, plan, steps, rng, *, loss_scale=6.0):
+    """Feed ``steps`` draws + noisy losses; resync at window boundaries.
+    Returns the final plan and every plan produced along the way."""
+    plans = []
+    for s in range(steps):
+        b = plan.sample(s)
+        ctl.observe(s, loss_scale + 0.1 * float(rng.standard_normal()),
+                    b.dp, b.bias)
+        if ctl.should_resync(s):
+            plan = ctl.resync(s)
+            plans.append(plan)
+    return plan, plans
+
+
+# --------------------------------------------------------------------------
+# 1. simplex invariant
+# --------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None, derandomize=True)
+@given(st.sampled_from([0.3, 0.5, 0.7]), st.integers(0, 1000),
+       st.sampled_from([1, 2, 3]))
+def test_distributions_stay_on_simplex(target, seed, n_layers):
+    plan0 = _plan(target)
+    ctl = OnlineSearch(plan0, n_layers=n_layers, cfg=_cfg(seed=seed))
+    rng = np.random.default_rng(seed)
+    _, plans = _drive(ctl, plan0, 12, rng)
+    assert len(plans) == 3
+    for row in ctl.k:
+        assert np.all(row >= 0.0)
+        assert abs(float(row.sum()) - 1.0) < 1e-5
+    d = ctl.current_dist()
+    assert np.all(d >= 0.0) and abs(float(d.sum()) - 1.0) < 1e-12
+    for p in plans:
+        assert all(k >= 0.0 for k in p.dist)
+        assert abs(sum(p.dist) - 1.0) < 1e-9
+
+
+# --------------------------------------------------------------------------
+# 2. support closure under random resync/step interleavings
+# --------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None, derandomize=True)
+@given(st.integers(0, 10_000), st.sampled_from([2, 3, 5]),
+       st.booleans())
+def test_every_post_resync_draw_inside_frozen_superset(seed, resync_every,
+                                                       rising_loss):
+    """Whatever the interleaving of steps and resyncs — and whether the
+    loss permits cheapening or forces a back-off — every draw from every
+    re-distributed plan stays inside plan0's frozen bucket superset."""
+    plan0 = _plan(0.5, dp_max=4)
+    superset = set(plan0.buckets())
+    ctl = OnlineSearch(plan0, n_layers=2,
+                       cfg=_cfg(resync_every=resync_every, seed=seed))
+    rng = np.random.default_rng(seed)
+    plan = plan0
+    for s in range(4 * resync_every):
+        b = plan.sample(s)
+        assert (b.dp, b.bias) in superset, (s, b.dp, b.bias)
+        drift = 0.05 * s if rising_loss else -0.01 * s
+        ctl.observe(s, 6.0 + drift + 0.1 * float(rng.standard_normal()),
+                    b.dp, b.bias)
+        if ctl.should_resync(s):
+            plan = ctl.resync(s)
+            assert set(plan.support()) <= set(plan0.support())
+            for probe in range(64):
+                pb = plan.sample(10_000 + probe)
+                assert (pb.dp, pb.bias) in superset, (pb.dp, pb.bias)
+    assert ctl.resyncs == 4
+
+
+def test_with_dist_rejects_support_escape():
+    plan = _plan(0.5, dp_max=4)            # support ⊆ {1, 2, 4}
+    assert 3 not in plan.support()
+    bad = np.zeros(plan.n_patterns)
+    bad[2] = 1.0                           # all mass on dp=3
+    with pytest.raises(BucketSupersetViolation, match="escapes the frozen"):
+        plan.with_dist(bad)
+    with pytest.raises(BucketSupersetViolation, match="shape"):
+        plan.with_dist(np.ones(3) / 3)
+    # reweighting INSIDE the support is fine and keeps the bucket universe
+    ok = plan.with_dist(np.asarray(plan.dist)[::-1] * 0 + plan.dist)
+    assert set(ok.buckets()) <= set(plan.buckets())
+
+
+def test_trainer_superset_guard_raises_not_compiles():
+    """A corrupted dispatch plan must raise BucketSupersetViolation at
+    sample-dispatch, never reach the compile path (the hot-path half of
+    the contract)."""
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_smoke
+    from repro.core.plan import DropoutPlan
+    from repro.data.pipeline import SyntheticLMData
+    from repro.models import init_lm, materialize
+    from repro.optim.optimizers import AdamW
+    from repro.train.distributed import DistributedTrainer, TrainerConfig
+
+    cfg = dataclasses.replace(get_smoke("qwen2_1_5b"), dtype="float32")
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    plan = build_plan("rdp", 0.5, nb=cfg.pattern_nb, dp_max=4,
+                      block=cfg.d_ff // cfg.pattern_nb)
+    data = SyntheticLMData(vocab=cfg.vocab, seq_len=16, global_batch=4)
+    trainer = DistributedTrainer(
+        cfg, AdamW(), params, profile="tp", plan=plan,
+        tcfg=TrainerConfig(steps=2, log_every=10_000),
+        online_search=OnlineSearchConfig(resync_every=2, seed=0))
+    # forge a plan whose support escapes the frozen superset, bypassing
+    # with_dist on purpose (simulating corrupted controller state)
+    forged = DropoutPlan(family="rdp", dist=(0.0, 0.0, 0.0, 0.0, 0.0,
+                                             0.0, 0.0, 1.0),
+                         nb=cfg.pattern_nb, block=1)
+    assert (8, 0) not in trainer._superset
+    trainer.plan = forged
+    with pytest.raises(BucketSupersetViolation, match="outside the frozen"):
+        trainer.run(data.batch)
+
+
+# --------------------------------------------------------------------------
+# 3. determinism: (seed, trajectory, step) -> bitwise-identical resyncs
+# --------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(st.integers(0, 10_000), st.sampled_from([0.3, 0.5]))
+def test_resync_deterministic_given_seed_and_step(seed, target):
+    plan0 = _plan(target)
+
+    def run():
+        ctl = OnlineSearch(plan0, n_layers=2, cfg=_cfg(seed=seed))
+        rng = np.random.default_rng(seed)
+        plan, plans = _drive(ctl, plan0, 8, rng)
+        return ctl, plan, plans
+
+    ca, pa, la = run()
+    cb, pb, lb = run()
+    assert pa.dist == pb.dist
+    assert [p.dist for p in la] == [p.dist for p in lb]
+    assert np.array_equal(ca.v, cb.v)
+    assert ca.ema == cb.ema and ca.baseline == cb.baseline
+
+
+def test_state_roundtrip_continues_bitwise_identically():
+    """state_arrays/load_state (the TrainState.extras checkpoint path):
+    a restored controller resyncs to the same distributions and draws the
+    same buckets as the uninterrupted one."""
+    plan0 = _plan(0.5)
+    cfg = _cfg(resync_every=3, seed=7)
+    a = OnlineSearch(plan0, n_layers=2, cfg=cfg)
+    rng = np.random.default_rng(7)
+    plan_a, _ = _drive(a, plan0, 6, rng)
+
+    b = OnlineSearch(plan0, n_layers=2, cfg=cfg)
+    b.load_state(a.state_arrays())
+    assert np.array_equal(b.current_dist(), a.current_dist())
+    assert b.ema == a.ema and b.baseline == a.baseline
+
+    # continue both with identical losses: same resyncs, same draws
+    plan_b = plan0.with_dist(b.current_dist())
+    assert plan_b.dist == plan_a.dist
+    for s in range(6, 12):
+        da, db = plan_a.sample(s), plan_b.sample(s)
+        assert (da.dp, da.bias) == (db.dp, db.bias)
+        a.observe(s, 5.9, da.dp, da.bias)
+        b.observe(s, 5.9, db.dp, db.bias)
+        if a.should_resync(s):
+            assert b.should_resync(s)
+            plan_a, plan_b = a.resync(s), b.resync(s)
+            assert plan_a.dist == plan_b.dist
+
+
+def test_load_state_validates_shape():
+    ctl = OnlineSearch(_plan(0.5), n_layers=2, cfg=_cfg())
+    st_arrays = ctl.state_arrays()
+    st_arrays["v"] = st_arrays["v"][:1]
+    with pytest.raises(ValueError, match="search state v"):
+        ctl.load_state(st_arrays)
+
+
+def test_resync_before_observe_raises():
+    ctl = OnlineSearch(_plan(0.5), n_layers=1, cfg=_cfg())
+    assert not ctl.should_resync(3)        # no EMA yet
+    with pytest.raises(RuntimeError, match="before any observe"):
+        ctl.resync(3)
+
+
+# --------------------------------------------------------------------------
+# controller semantics: loss gating + residual rejection
+# --------------------------------------------------------------------------
+
+def test_rates_drift_up_while_loss_permits_and_back_off_otherwise():
+    plan0 = _plan(0.5, dp_max=4)
+    ctl = OnlineSearch(plan0, n_layers=2,
+                       cfg=_cfg(resync_every=2, loss_tolerance=0.05))
+    # falling loss: both resyncs cheapen (rates move up)
+    for s in range(4):
+        ctl.observe(s, 6.0 - 0.1 * s, 2, 0)
+        if ctl.should_resync(s):
+            ctl.resync(s)
+    assert ctl.resync_log[-1]["cheapen"]
+    rates_up = ctl.p.copy()
+    assert np.all(rates_up >= plan0.expected_rate() - 1e-6)
+    # loss explosion: the next resync must back off
+    for s in range(4, 6):
+        ctl.observe(s, 50.0, 2, 0)
+    ctl.resync(5)
+    assert not ctl.resync_log[-1]["cheapen"]
+    assert np.all(ctl.p <= rates_up + 1e-6)
+    # deeper layers drift faster (depth-scaled rate step)
+    deltas = np.abs(np.diff([r["target_rate"]
+                             for r in ctl.resync_log[0]["layers"]]))
+    assert np.all(deltas > 0)
+
+
+def test_residual_rejection_keeps_previous_distribution():
+    plan0 = _plan(0.5, dp_max=4)
+    ctl = OnlineSearch(plan0, n_layers=1,
+                       cfg=_cfg(residual_tol=0.0))   # reject everything
+    v0, k0, p0 = ctl.v.copy(), ctl.k.copy(), ctl.p.copy()
+    ctl.observe(0, 6.0, 2, 0)
+    plan = ctl.resync(0)
+    assert not ctl.resync_log[-1]["layers"][0]["accepted"]
+    assert np.array_equal(ctl.v, v0) and np.array_equal(ctl.k, k0)
+    assert np.array_equal(ctl.p, p0)
+    assert plan.dist == plan0.with_dist(ctl.current_dist()).dist
