@@ -1,19 +1,27 @@
 """Kernel micro-bench: compact vs mask-multiply FFN across the registries.
 
 Sweeps every registered pattern family (``core.plan.FAMILIES``) over every
-backend the family declares ("slice" / "gather" / "pallas"), timing the
-compact ``apply_ffn`` against the family's own mask-multiply
-``oracle_ffn`` — the thing conventional frameworks execute.  Because the
-sweep is registry-driven, a newly registered family or backend is
-benchmarked with zero edits here (the same property the agreement tests in
-tests/test_kernels.py exploit).
+backend the family declares ("slice" / "gather" / "pallas" / "fused" /
+"int8"), timing the compact ``apply_ffn`` against the family's own
+mask-multiply ``oracle_ffn`` — the thing conventional frameworks execute.
+Because the sweep is registry-driven, a newly registered family or backend
+is benchmarked with zero edits here (the same property the agreement tests
+in tests/test_kernels.py exploit).
+
+When more than one device is visible (e.g. ``XLA_FLAGS=--xla_force_host_
+platform_device_count=8``) a second, also registry-driven sweep runs every
+family × backend through the ``parallel.shard_kernels`` shard_map path on
+the host tp mesh — rows carry ``variant=shard_map:<strategy>`` and the
+masked baseline is timed on the same mesh, so the speedup column compares
+like with like.  Combinations the dispatcher would route back to GSPMD
+(``shard_strategy(...) is None``) are printed as skips, never silent.
 
 The TPU win is structural (1/dp of the FLOPs and weight DMA on the matmuls
 the family patterns); on CPU we report measured wall-time of the XLA
-compact paths vs the masked path.  The Pallas backend runs interpret-mode
-on CPU — numerically identical but not a meaningful wall-time, so it is
-skipped off-TPU unless ``--include-pallas`` is passed (skips are printed,
-never silent).
+compact paths vs the masked path.  Pallas-engine backends ("pallas" and
+the fused FFN) run interpret-mode on CPU — numerically identical but not a
+meaningful wall-time, so they are skipped off-TPU unless
+``--include-pallas`` is passed (skips are printed, never silent).
 
 Run:  PYTHONPATH=src python -m benchmarks.kernel_bench [--quick]
       [--include-pallas] [--out rows.csv] [--json BENCH_kernel.json]
@@ -25,7 +33,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core.plan import FAMILIES
+from repro.core.plan import BACKENDS, FAMILIES
 
 from .common import bench_record, emit, time_fn, write_json
 
@@ -36,6 +44,11 @@ def _setup(m, d, ff):
     w_up = jax.random.normal(ks[1], (d, ff), jnp.float32) * 0.02
     w_dn = jax.random.normal(ks[2], (ff, d), jnp.float32) * 0.02
     return x, w_up, w_dn
+
+
+def _skip_pallas_engine(backend: str, on_tpu: bool, include: bool) -> bool:
+    return (BACKENDS[backend].engine == "pallas" and not on_tpu
+            and not include)
 
 
 def main(argv=None):
@@ -66,10 +79,10 @@ def main(argv=None):
             continue                     # dp=1 rows below are the baseline
         fam = FAMILIES[fname]
         for backend in fam.backends:
-            if backend == "pallas" and not on_tpu and not args.include_pallas:
-                print(f"[skip] {fname}/pallas: interpret-mode wall time is "
-                      f"not meaningful off-TPU (--include-pallas to force)",
-                      flush=True)
+            if _skip_pallas_engine(backend, on_tpu, args.include_pallas):
+                print(f"[skip] {fname}/{backend}: interpret-mode wall time "
+                      f"is not meaningful off-TPU (--include-pallas to "
+                      f"force)", flush=True)
                 continue
             for dp in dps:
                 try:
@@ -89,11 +102,82 @@ def main(argv=None):
                 t_m = time_fn(masked, x)
                 rows.append({
                     "family": fname, "backend": backend, "dp": dp,
+                    "variant": "local",
                     "pattern_matmul_flop_fraction": round(1.0 / dp, 4),
                     "t_compact_us": round(t_c * 1e6, 1),
                     "t_masked_us": round(t_m * 1e6, 1),
                     "speedup": round(t_m / t_c, 3),
                 })
+
+    # shard_map sweep — same registries, through parallel.shard_kernels on
+    # the host tp mesh (needs >1 visible device; force with XLA_FLAGS)
+    if jax.device_count() > 1:
+        from repro.launch.mesh import make_host_mesh, mesh_from_spec
+        from repro.parallel import shard_kernels as SK
+        from repro.parallel.sharding import PROFILES, set_mesh_and_rules
+        n_dev = jax.device_count()
+        # prefer a dp x tp mesh (2 x N/2, matching the train bench) over
+        # 1 x N: a narrower model axis keeps nb_local > 1 so the sweep
+        # exercises weight_local / padded, not just token_local
+        mesh = (mesh_from_spec(f"2x{n_dev // 2}") if n_dev % 2 == 0
+                and n_dev >= 4 else make_host_mesh())
+        rules = PROFILES["tp"]
+        maxes, n_m = SK._model_axes(mesh, rules)
+        x3 = x.reshape(1, m, d)              # seq dim for token_local
+        with set_mesh_and_rules(mesh, rules):
+            for fname in sorted(FAMILIES):
+                if fname == "identity":
+                    continue
+                fam = FAMILIES[fname]
+                for backend in fam.backends:
+                    if _skip_pallas_engine(backend, on_tpu,
+                                           args.include_pallas):
+                        print(f"[skip] shard {fname}/{backend}: interpret-"
+                              f"mode wall time is not meaningful off-TPU "
+                              f"(--include-pallas to force)", flush=True)
+                        continue
+                    for dp in dps:
+                        if dp == 1:
+                            continue         # dispatcher no-ops at dp=1
+                        try:
+                            fam.validate(nb, dp)
+                        except ValueError as e:
+                            print(f"[skip] shard {fname}/{backend} dp={dp}: "
+                                  f"{e}", flush=True)
+                            continue
+                        strat = SK.shard_strategy(
+                            fname, x_ndim=3, seq=m, k=d, d_ff=ff, dp=dp,
+                            nb=nb, n_m=n_m)
+                        if strat is None:
+                            print(f"[skip] shard {fname}/{backend} dp={dp}: "
+                                  f"no partition strategy on {n_m} model "
+                                  f"shards (falls back to GSPMD)",
+                                  flush=True)
+                            continue
+                        bias = min(1, dp - 1)
+                        kw = dict(dp=dp, bias=bias, nb=nb, act=act)
+                        compact = jax.jit(
+                            lambda x, kw=kw, backend=backend, fam=fam:
+                            fam.apply_ffn(x, w_up, w_dn, None,
+                                          backend=backend, **kw))
+                        masked = jax.jit(lambda x, kw=kw, fam=fam:
+                                         fam.oracle_ffn(x, w_up, w_dn, None,
+                                                        **kw))
+                        t_c = time_fn(compact, x3)
+                        t_m = time_fn(masked, x3)
+                        rows.append({
+                            "family": fname, "backend": backend, "dp": dp,
+                            "variant": f"shard_map:{strat}",
+                            "pattern_matmul_flop_fraction":
+                                round(1.0 / dp, 4),
+                            "t_compact_us": round(t_c * 1e6, 1),
+                            "t_masked_us": round(t_m * 1e6, 1),
+                            "speedup": round(t_m / t_c, 3),
+                        })
+    else:
+        print("[skip] shard_map sweep: single device (force more with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+              flush=True)
     emit(rows, args.out)
     if args.json:
         write_json(args.json, bench_record(
@@ -101,7 +185,8 @@ def main(argv=None):
             config={"m": m, "d": d, "ff": ff, "nb": nb, "dps": dps,
                     "families": sorted(f for f in FAMILIES
                                        if f != "identity"),
-                    "include_pallas": bool(args.include_pallas or on_tpu)},
+                    "include_pallas": bool(args.include_pallas or on_tpu),
+                    "devices": jax.device_count()},
             rows=rows))
     return rows
 

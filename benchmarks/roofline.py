@@ -5,15 +5,27 @@ three-term roofline table, per (arch × shape × mesh), with
   usefulness  = MODEL_FLOPS / HLO_FLOPs (remat/replication waste detector)
 
   python -m benchmarks.roofline [--dir experiments/dryrun] [--mesh 16x16]
+
+``--ffn`` switches to the compact-FFN roofline (DESIGN.md §15): the
+analytic per-model-shard FLOPs and HBM bytes of one pattern FFN under
+each shard_map partition strategy — dense GSPMD baseline vs compact vs
+the fused kernel (which keeps the ``[tokens, ffn_kept]`` activation in
+VMEM instead of round-tripping it through HBM).  When ``--bench
+BENCH_train_tp.json`` is also given, the measured ``speedup_vs_dense``
+column is joined in and the run FAILS (exit 1) if any dp ≥ 2 row lost to
+dense — the gate the shard_map kernels exist to hold.
+
+  python -m benchmarks.roofline --ffn --bench BENCH_train_tp.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config
-from repro.launch.hlo_analysis import PEAK_FLOPS_BF16
+from repro.launch.hlo_analysis import HBM_BW, PEAK_FLOPS_BF16
 
 from .common import emit
 
@@ -113,12 +125,115 @@ def load_rows(dry_dir: Path, mesh: str):
     return rows
 
 
+def _ffn_traffic(tokens: int, d: int, width: int, n_mats: int,
+                 dtype_bytes: int, *, fused: bool) -> float:
+    """HBM bytes for one (gated) FFN at hidden ``width`` on one shard:
+    weights + activations in/out + the ``[tokens, width]`` hidden written
+    then re-read — the round-trip the fused kernel keeps in VMEM."""
+    w = n_mats * d * width * dtype_bytes
+    io = 2 * tokens * d * dtype_bytes             # x in, y out
+    h = 0 if fused else 2 * tokens * width * dtype_bytes
+    return float(w + io + h)
+
+
+def ffn_rows(*, tokens: int, d: int, ff: int, nb: int, n_m: int,
+             dps=(1, 2, 4, 8), gated: bool = True, dtype_bytes: int = 2,
+             measured=None):
+    """Per-model-shard roofline of one pattern FFN per strategy (§15).
+
+    Dense baseline is the Megatron split (width ff/n_m per shard, no
+    pattern savings); compact widths follow the strategy shard_strategy
+    picks: weight_local keeps ff/(n_m·dp), padded keeps ceil(nb_loc/dp)
+    blocks, token_local keeps ff/dp but over tokens/n_m with the full
+    weights gathered.  Time bound = max(FLOP, HBM) roofline terms.
+    """
+    from repro.parallel.shard_kernels import shard_strategy
+    n_mats = 3 if gated else 2
+    blk = ff // nb
+
+    def bound(flops, bytes_):
+        return max(flops / PEAK_FLOPS_BF16, bytes_ / HBM_BW)
+
+    w_dense = ff // n_m
+    f_dense = 2.0 * tokens * d * w_dense * n_mats
+    t_dense = bound(f_dense, _ffn_traffic(tokens, d, w_dense, n_mats,
+                                          dtype_bytes, fused=False))
+    rows = []
+    for dp in dps:
+        strat = shard_strategy("rdp", x_ndim=3, seq=tokens, k=d, d_ff=ff,
+                               dp=dp, nb=nb, n_m=n_m) or "gspmd"
+        toks, w_bytes_extra = tokens, 0.0
+        if strat == "weight_local":
+            width = ff // (n_m * dp)
+        elif strat == "weight_local_padded":
+            width = -(-(nb // n_m) // dp) * blk
+        elif strat == "token_local":
+            width, toks = ff // dp, tokens // n_m
+            # the gather re-materializes the other shards' weight columns
+            w_bytes_extra = n_mats * d * (ff - ff // n_m) * dtype_bytes
+        else:                                     # gspmd / dp=1: dense
+            width = w_dense
+        flops = 2.0 * toks * d * width * n_mats
+        b_c = _ffn_traffic(toks, d, width, n_mats, dtype_bytes,
+                           fused=False) + w_bytes_extra
+        b_f = _ffn_traffic(toks, d, width, n_mats, dtype_bytes,
+                           fused=True) + w_bytes_extra
+        row = {
+            "dp": dp, "strategy": strat,
+            "flop_fraction_vs_dense": round(flops / f_dense, 4),
+            "hbm_compact_mb": round(b_c / 2**20, 3),
+            "hbm_fused_mb": round(b_f / 2**20, 3),
+            "fused_traffic_saved": round(1.0 - b_f / b_c, 4),
+            "roofline_speedup": round(t_dense / bound(flops, b_c), 3),
+            "roofline_speedup_fused": round(t_dense / bound(flops, b_f), 3),
+        }
+        if measured is not None:
+            m = {r["dp"]: r for r in measured}.get(dp)
+            row["speedup_vs_dense_measured"] = (
+                m["speedup_vs_dense"] if m else None)
+        rows.append(row)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--ffn", action="store_true",
+                    help="compact-FFN roofline (DESIGN.md §15) instead of "
+                         "the dry-run aggregation")
+    ap.add_argument("--bench", default=None,
+                    help="with --ffn: join + gate measured speedups from "
+                         "a BENCH_train_tp.json")
     args = ap.parse_args(argv)
+    if args.ffn:
+        measured, n_m, tokens, geo = None, 4, 256, None
+        if args.bench:
+            d = json.loads(Path(args.bench).read_text())
+            measured = d["rows"]
+            n_m = d["config"].get("mesh_shape", {}).get("model", n_m)
+            tokens = d["config"]["batch"] * d["config"]["seq"]
+            geo = d["config"]
+        from repro.configs import get_smoke
+        cfg = get_smoke("qwen2_1_5b")
+        geo = geo or {}
+        rows = ffn_rows(
+            tokens=tokens, d=geo.get("d_model", cfg.d_model),
+            ff=geo.get("d_ff", cfg.d_ff),
+            nb=geo.get("pattern_nb", cfg.pattern_nb),
+            n_m=n_m, measured=measured)
+        emit(rows, args.out)
+        if measured is not None:
+            lost = [r for r in rows if r["dp"] >= 2
+                    and r.get("speedup_vs_dense_measured") is not None
+                    and r["speedup_vs_dense_measured"] < 1.0]
+            if lost:
+                print(f"GATE FAILED: compact lost to dense on the tp mesh "
+                      f"at dp={[r['dp'] for r in lost]}", file=sys.stderr)
+                sys.exit(1)
+            print("gate ok: compact beat dense for every measured dp >= 2")
+        return rows
     rows = load_rows(Path(args.dir), args.mesh)
     emit(rows, args.out)
     return rows

@@ -79,27 +79,38 @@ class Backend:
 
     ``differentiable`` declares that ``jax.grad`` flows through the
     backend's pattern matmuls — either via XLA autodiff ("slice"/"gather")
-    or via registered custom-VJP kernels ("pallas", kernels/autodiff.py).
-    Every registered backend is currently trainable; the flag exists so a
-    future inference-only backend (e.g. a quantized decode kernel) can
-    declare itself and be rejected by the Trainer instead of failing deep
-    inside ``jax.grad``.
+    or via registered custom-VJP kernels ("pallas"/"fused",
+    kernels/autodiff.py, kernels/fused_ffn.py).  The Trainer rejects
+    non-differentiable backends ("int8") at construction instead of
+    failing deep inside ``jax.grad``; the serve/decode path accepts them.
+
+    ``engine`` names the execution substrate: "xla" backends lower through
+    the partitioner everywhere; "pallas" backends run Mosaic on TPU and
+    interpret-mode elsewhere (benchmarks skip them off-TPU by default).
+
+    ``quantized`` marks backends whose numerics are intentionally lossy
+    (per-kept-block int8 weights) — the registry-generic oracle-agreement
+    tests switch to a quantization-error tolerance for these instead of
+    the exact-kernel 1e-4 bound.
     """
 
     name: str
     doc: str = ""
     differentiable: bool = True
+    engine: str = "xla"
+    quantized: bool = False
 
 
 BACKENDS: dict[str, Backend] = {}
 
 
 def register_backend(name: str, doc: str = "", *,
-                     differentiable: bool = True) -> Backend:
+                     differentiable: bool = True, engine: str = "xla",
+                     quantized: bool = False) -> Backend:
     """Register an execution backend.  Raises on duplicates."""
     if name in BACKENDS:
         raise ValueError(f"backend {name!r} already registered")
-    BACKENDS[name] = Backend(name, doc, differentiable)
+    BACKENDS[name] = Backend(name, doc, differentiable, engine, quantized)
     return BACKENDS[name]
 
 
@@ -120,7 +131,19 @@ register_backend("pallas", "compact-DMA Pallas kernels, fwd + custom-VJP "
                            "bwd (kernels/*_matmul, kernels/*_matmul_bwd via "
                            "kernels/autodiff; interpret-mode on CPU, Mosaic "
                            "on TPU; trains end-to-end at ~1/dp FLOPs in "
-                           "both passes)")
+                           "both passes)", engine="pallas")
+register_backend("fused", "single-kernel pattern-aware FFN: up-proj + "
+                          "activation (+gate) + down-proj fused over kept "
+                          "blocks in VMEM (kernels/fused_ffn) — the "
+                          "[tokens, ffn_kept] intermediate never round-trips "
+                          "HBM; custom-VJP backward rematerializes it and "
+                          "runs the compact dgrad/wgrad kernels",
+                 engine="pallas")
+register_backend("int8", "per-kept-block symmetric int8 weight quantization "
+                         "with f32 accumulation (kernels/int8_ffn) — "
+                         "inference/serve only; the Trainer rejects it "
+                         "until a quantization-aware VJP lands",
+                 differentiable=False, quantized=True)
 
 
 # ==========================================================================
@@ -322,6 +345,75 @@ def _gather_blocks(w, axis: int, nb: int, dp: int, b):
     return jnp.take(w, idx, axis=axis)
 
 
+def _static_bias(b) -> bool:
+    """Whether a bias is a compile-time int (the slice backend needs one;
+    shard-local biases are traced and route through gather instead)."""
+    return isinstance(b, (int, np.integer))
+
+
+def _rdp_compact_ffn(x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
+                     act, constrained: bool = True):
+    """The rdp-style compact (gated) FFN body, shared by the GSPMD path
+    (``RdpFamily.apply_ffn``, constrained=True) and the shard_map bodies
+    in ``parallel/shard_kernels.py`` (constrained=False, possibly traced
+    shard-local bias, shard-local nb)."""
+    if backend == "pallas":
+        # compact Pallas kernels: kept column/row blocks are the only
+        # ones DMA'd (kernels/rdp_matmul); same kept set and ×dp
+        # placement as the XLA paths, so backends are interchangeable
+        from repro.kernels import ops as KO
+        return KO.rdp_ffn(x, w_up, w_down, jnp.int32(bias), dp=dp,
+                          act=act, w_gate=w_gate,
+                          block=w_up.shape[-1] // nb)
+    if backend == "fused":
+        # one kernel for the whole pattern FFN — the [tokens, ffn_kept]
+        # hidden lives in VMEM scratch only (kernels/fused_ffn)
+        from repro.kernels import ops as KO
+        return KO.fused_ffn(x, w_up, w_down, jnp.int32(bias), dp=dp,
+                            act=act, w_gate=w_gate,
+                            block=w_up.shape[-1] // nb)
+    if backend == "int8":
+        from repro.kernels.int8_ffn import int8_compact_ffn
+        return int8_compact_ffn(x, w_up, w_down, w_gate, dp=dp, bias=bias,
+                                nb=nb, act=act)
+    take = (_gather_blocks if backend == "gather" or not _static_bias(bias)
+            else _slice_blocks)
+    w_up = take(w_up, 1, nb, dp, bias)
+    w_down = take(w_down, 0, nb, dp, bias)
+    if w_gate is not None:
+        w_gate = take(w_gate, 1, nb, dp, bias)
+    h = x @ w_up
+    if constrained:
+        # the kept hidden activation is d_ff/dp wide — its own logical axis
+        # ('ffn_kept', same mesh mapping as 'ffn') so mesh divisibility of
+        # the SHRUNK dim is validated per bucket (DropoutPlan.validate_mesh)
+        # instead of silently replicating when d_ff/dp stops dividing TP
+        h = constrain(h, ("batch", "seq", "ffn_kept" if dp > 1 else "ffn"))
+    h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
+    if dp > 1:
+        h = h * dp  # inverted-dropout scale
+    return h @ w_down
+
+
+def _tdp_ffn_body(x, w_up, w_down, w_gate, *, dp, bias, tile, backend, act,
+                  constrained: bool = True):
+    """The TDP FFN body (diagonal-tile-dropped up projection), shared by
+    ``TdpFamily.apply_ffn`` and the tile-column-partitioned shard_map body
+    (traced shard-local bias, local column chunk)."""
+    if backend == "pallas":
+        from repro.kernels import ops as KO
+        h = KO.tdp_mm(x, w_up, jnp.int32(bias), dp=dp, tile=tile)
+    else:
+        h = (x @ (w_up * P.tdp_mask(w_up.shape[0], w_up.shape[1], dp,
+                                    bias, tile, w_up.dtype))) * dp
+    if constrained:
+        h = constrain(h, ("batch", "seq", "ffn"))
+    # gate and down projection stay dense (only the up-projection's
+    # synapses are dropped) — matches the historical layers.py path
+    h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
+    return h @ w_down
+
+
 # ==========================================================================
 # Built-in families
 # ==========================================================================
@@ -359,35 +451,26 @@ class RdpFamily(PatternFamily):
     w_down form compact matrices at 1/dp the FLOPs."""
 
     name = "rdp"
-    backends = ("slice", "gather", "pallas")
+    backends = ("slice", "gather", "pallas", "fused", "int8")
     moe_hidden_slice = True
     head_granular = True
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
-        """Compact FFN over kept hidden neurons (slice/gather/pallas)."""
-        if backend == "pallas":
-            # compact Pallas kernels: kept column/row blocks are the only
-            # ones DMA'd (kernels/rdp_matmul); same kept set and ×dp
-            # placement as the XLA paths, so backends are interchangeable
-            from repro.kernels import ops as KO
-            return KO.rdp_ffn(x, w_up, w_down, jnp.int32(bias), dp=dp,
-                              act=act, w_gate=w_gate,
-                              block=w_up.shape[-1] // nb)
-        take = _gather_blocks if backend == "gather" else _slice_blocks
-        w_up = take(w_up, 1, nb, dp, bias)
-        w_down = take(w_down, 0, nb, dp, bias)
-        if w_gate is not None:
-            w_gate = take(w_gate, 1, nb, dp, bias)
-        h = x @ w_up
-        # the kept hidden activation is d_ff/dp wide — its own logical axis
-        # ('ffn_kept', same mesh mapping as 'ffn') so mesh divisibility of
-        # the SHRUNK dim is validated per bucket (DropoutPlan.validate_mesh)
-        # instead of silently replicating when d_ff/dp stops dividing TP
-        h = constrain(h, ("batch", "seq", "ffn_kept" if dp > 1 else "ffn"))
-        h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
-        h = h * dp  # inverted-dropout scale
-        return h @ w_down
+        """Compact FFN over kept hidden neurons.
+
+        Under an ambient mesh with a >1 'model' axis the whole pattern FFN
+        (any backend) runs inside shard_map — each model shard's compact
+        kernel on its local kept blocks, no GSPMD resharding
+        (parallel/shard_kernels.py); otherwise the plain partitioned path.
+        """
+        from repro.parallel import shard_kernels as SK
+        out = SK.maybe_shard_ffn(self.name, x, w_up, w_down, w_gate, dp=dp,
+                                 bias=bias, nb=nb, backend=backend, act=act)
+        if out is not None:
+            return out
+        return _rdp_compact_ffn(x, w_up, w_down, w_gate, dp=dp, bias=bias,
+                                nb=nb, backend=backend, act=act)
 
     def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
         """Mask-multiply RDP reference (what dense frameworks execute)."""
@@ -407,19 +490,19 @@ class TdpFamily(PatternFamily):
 
     def apply_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, backend,
                   act):
-        """FFN with diagonal-tile-dropped up projection (slice/pallas)."""
+        """FFN with diagonal-tile-dropped up projection (slice/pallas).
+
+        Shard-aware like RdpFamily: on a >1 'model' mesh the tile-column-
+        partitioned shard_map body runs instead (every tile-column keeps
+        exactly tr/dp tiles, so any column split is balanced)."""
+        from repro.parallel import shard_kernels as SK
+        out = SK.maybe_shard_ffn(self.name, x, w_up, w_down, w_gate, dp=dp,
+                                 bias=bias, nb=nb, backend=backend, act=act)
+        if out is not None:
+            return out
         tile = max(w_up.shape[0] // nb, 1)
-        if backend == "pallas":
-            from repro.kernels import ops as KO
-            h = KO.tdp_mm(x, w_up, jnp.int32(bias), dp=dp, tile=tile)
-        else:
-            h = (x @ (w_up * P.tdp_mask(w_up.shape[0], w_up.shape[1], dp,
-                                        bias, tile, w_up.dtype))) * dp
-        h = constrain(h, ("batch", "seq", "ffn"))
-        # gate and down projection stay dense (only the up-projection's
-        # synapses are dropped) — matches the historical layers.py path
-        h = act(h) * (x @ w_gate) if w_gate is not None else act(h)
-        return h @ w_down
+        return _tdp_ffn_body(x, w_up, w_down, w_gate, dp=dp, bias=bias,
+                             tile=tile, backend=backend, act=act)
 
     def oracle_ffn(self, x, w_up, w_down, w_gate, *, dp, bias, nb, act):
         """Mask-multiply TDP reference (dense matmul against masked W)."""
@@ -664,7 +747,8 @@ class DropoutPlan:
         return self.bind(dp, b)
 
     # ---- mesh composition ------------------------------------------------
-    def validate_mesh(self, mesh, rules, dims: Mapping[str, int]) -> None:
+    def validate_mesh(self, mesh, rules, dims: Mapping[str, int], *,
+                      require_shard_kernels: bool = False) -> None:
         """Check every ``buckets()`` entry composes with a sharding profile.
 
         ``dims`` maps each pattern-compacted *logical axis* (e.g.
@@ -675,6 +759,15 @@ class DropoutPlan:
         back to replication — the compact matmul would run unsharded and
         the 1/dp FLOP win would not survive partitioning.  This raises
         ``MeshDivisibilityError`` at construction instead.
+
+        ``require_shard_kernels=True`` additionally enforces the
+        *weight-local* shard_map contract (parallel/shard_kernels.py): the
+        kept-block universe must partition evenly per model shard — each
+        shard owns ``nb / size`` contiguous pattern blocks and needs
+        ``dp | nb / size`` so it keeps exactly ``nb / size / dp`` of them.
+        Buckets that fail it still execute correctly (the token-local
+        fallback), so the strict mode is opt-in for deployments that demand
+        the zero-weight-movement path for every bucket.
         """
         from repro.parallel.sharding import rule_shard_axes
         for axis_name, full in dims.items():
@@ -695,6 +788,22 @@ class DropoutPlan:
                         f"({full} // dp) % {size} == 0, shrink the "
                         f"{mesh_axes} mesh axes, or pick a profile that "
                         f"does not shard '{axis_name}'")
+                if require_shard_kernels and dp > 1 and (
+                        self.nb % size != 0 or (self.nb // size) % dp != 0):
+                    per_shard = (self.nb // size if self.nb % size == 0
+                                 else f"{self.nb}/{size}")
+                    raise MeshDivisibilityError(
+                        f"plan bucket (dp={dp}, bias={bias}): the "
+                        f"kept-block universe (nb={self.nb}) does not "
+                        f"partition evenly over mesh axes {mesh_axes} "
+                        f"({size}-way) for the weight-local shard_map "
+                        f"path — each shard owns {per_shard} pattern "
+                        f"blocks and needs dp={dp} to divide that count "
+                        f"so kept blocks per shard divide evenly.  Fix: "
+                        f"raise nb so (nb // {size}) % dp == 0, restrict "
+                        f"the dp support, or drop "
+                        f"require_shard_kernels to allow the token-local "
+                        f"fallback for this bucket")
 
     def reseed(self, seed: int) -> "DropoutPlan":
         """The same plan with a different sampling seed."""

@@ -1,0 +1,255 @@
+"""Fused pattern-aware FFN Pallas kernel: up-proj + activation (+gate) +
+down-proj in ONE kernel over kept blocks only.
+
+The two-kernel compact path (``rdp_matmul_cols`` → act → ``rdp_matmul_rows``)
+round-trips the ``[tokens, ffn_kept]`` hidden activation through HBM twice
+(write after up-proj, read before down-proj) — ``2 · M · d_ff/dp`` elements
+of pure memory traffic per FFN.  Here the hidden block for one kept pattern
+block lives only in VMEM: the grid walks (token-block i, kept-block c), each
+step computes ``h_c = act(x_i @ Wu[:, c]) (· x_i @ Wg[:, c]) · dp`` in
+registers/VMEM and immediately accumulates ``h_c @ Wd[c, :]`` into an f32
+output scratch.  HBM traffic for the hidden drops to zero; dropped blocks
+are never DMA'd (same kept index_map as rdp_matmul — the paper's Fig. 3a
+"never fetch dropped data", taken through the whole FFN).
+
+The bias is a scalar-prefetch operand → one compiled kernel per dp (pattern
+bucketing), shard_map-composable with a traced shard-local bias.
+
+Backward: a ``jax.custom_vjp`` that REMATERIALIZES the compact hidden with
+``rdp_matmul_cols`` (1/dp FLOPs) and runs the existing compact dgrad/wgrad
+kernels (kernels/rdp_matmul_bwd) + zero-scatter placement — so the fused
+backend trains end-to-end at ~1/dp FLOPs in both passes while saving the
+forward residual for ``h`` entirely (memory: only x and the weights are
+saved, like flash-attention-style remat).
+
+Blocking: the contraction (d_model) and output (d_model) dims are kept
+whole per grid step — VMEM holds ``bm·d_model`` x, two ``d_model·block``
+weight panels and a ``bm·d_model`` f32 accumulator, fine for d_model up to
+~4k at bm=128.  ``bm`` auto-fits via the shared ``_fit_block``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .autodiff import scatter_col_blocks, scatter_row_blocks
+from .rdp_matmul import LANE, _fit_block, rdp_matmul_cols
+from .rdp_matmul_bwd import (rdp_cols_dgrad, rdp_cols_wgrad, rdp_rows_dgrad,
+                             rdp_rows_wgrad)
+
+
+def _fused_kernel(act, dp: int, gated: bool):
+    """Kernel body: accumulate one kept block's FFN contribution.
+
+    Grid (m/bm, kept_nb); axis 1 is the kept-block contraction — the
+    output block (i, ·) is revisited across c, with the f32 scratch
+    zeroed at c==0 and flushed at the last kept block.
+    """
+
+    def body(x_ref, wu_ref, *rest):
+        if gated:
+            wg_ref, wd_ref, o_ref, acc_ref = rest
+        else:
+            wd_ref, o_ref, acc_ref = rest
+        c = pl.program_id(1)
+
+        @pl.when(c == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        u = jax.lax.dot_general(
+            x_ref[...], wu_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        h = act(u)
+        if gated:
+            g = jax.lax.dot_general(
+                x_ref[...], wg_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            h = h * g
+        # ×dp inverted-dropout scale AFTER the activation (oracle-exact);
+        # cast to the storage dtype so numerics match the two-kernel path
+        # (which round-trips h through HBM at that dtype)
+        h = (h * dp).astype(x_ref.dtype)
+        acc_ref[...] += jax.lax.dot_general(
+            h, wd_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        @pl.when(c == pl.num_programs(1) - 1)
+        def _fin():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    def kernel(b_ref, *refs):
+        body(*refs)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "dp", "block", "bm", "act", "interpret"))
+def fused_ffn_fwd(x2, w_up, w_gate, w_down, b, *, dp: int, block: int = LANE,
+                  bm: int = 128, act=jax.nn.silu,
+                  interpret: bool = False) -> jax.Array:
+    """y[M, O] = (act(x @ Wu[:, kept]) [· (x @ Wg[:, kept])] · dp) @ Wd[kept, :]
+
+    x2: [M, K]; w_up/w_gate: [K, N]; w_down: [N, O]; b: int32 bias
+    (static or traced).  w_gate may be None.  Requires dp | (N/block).
+    """
+    m, kdim = x2.shape
+    k2, n = w_up.shape
+    nd, odim = w_down.shape
+    assert kdim == k2 and nd == n, (x2.shape, w_up.shape, w_down.shape)
+    nb = n // block
+    assert n % block == 0 and nb % dp == 0, (n, block, dp)
+    bm = _fit_block(m, bm)
+    assert m % bm == 0, (m, bm)
+    gated = w_gate is not None
+
+    grid = (m // bm, nb // dp)
+    kept = lambda c, bias: (bias[0] + c * dp) % nb  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((bm, kdim), lambda i, c, bias: (i, 0)),
+        # only KEPT column-blocks of Wu (and Wg) / row-blocks of Wd are
+        # ever DMA'd:
+        pl.BlockSpec((kdim, block), lambda i, c, bias: (0, kept(c, bias))),
+        pl.BlockSpec((block, odim), lambda i, c, bias: (kept(c, bias), 0)),
+    ]
+    args = [x2, w_up, w_down]
+    if gated:
+        in_specs.insert(2, pl.BlockSpec(
+            (kdim, block), lambda i, c, bias: (0, kept(c, bias))))
+        args = [x2, w_up, w_gate, w_down]
+
+    return pl.pallas_call(
+        _fused_kernel(act, dp, gated),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, odim), lambda i, c, bias: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((bm, odim), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, odim), x2.dtype),
+        interpret=interpret,
+    )(jnp.asarray(b, jnp.int32).reshape(1), *args)
+
+
+# --------------------------------------------------------------------------
+# custom-VJP twins (gated and ungated — None args don't thread cleanly
+# through custom_vjp residuals, so the gate variant is its own primitive)
+# --------------------------------------------------------------------------
+
+def _bwd_common(x2, w_up, w_gate, w_down, b, dy, *, dp, block, act,
+                interpret):
+    """Shared compact backward: rematerialize h, compact dgrad/wgrad."""
+    u = rdp_matmul_cols(x2, w_up, b, dp=dp, block=block, scale=False,
+                        interpret=interpret)
+    if w_gate is not None:
+        g = rdp_matmul_cols(x2, w_gate, b, dp=dp, block=block, scale=False,
+                            interpret=interpret)
+        h, act_vjp = jax.vjp(lambda u_, g_: (act(u_) * g_ * dp)
+                             .astype(x2.dtype), u, g)
+    else:
+        h, act_vjp = jax.vjp(lambda u_: (act(u_) * dp).astype(x2.dtype), u)
+    # down-projection adjoints (compact cotangent dh, kept-row wgrad)
+    dh = rdp_rows_dgrad(dy, w_down, b, dp=dp, block=block, scale=False,
+                        interpret=interpret)
+    dwd_c = rdp_rows_wgrad(h, dy, dp=dp, block=block, scale=False,
+                           interpret=interpret)
+    dwd = scatter_row_blocks(dwd_c, w_down.shape[0], dp, b, block=block)
+    # activation (+gate, +×dp) adjoint
+    if w_gate is not None:
+        du, dg = act_vjp(dh)
+    else:
+        (du,) = act_vjp(dh)
+        dg = None
+    # up-projection adjoints
+    dx = rdp_cols_dgrad(du, w_up, b, dp=dp, block=block, scale=False,
+                        interpret=interpret)
+    dwu_c = rdp_cols_wgrad(x2, du, dp=dp, block=block, scale=False,
+                           interpret=interpret)
+    dwu = scatter_col_blocks(dwu_c, w_up.shape[1], dp, b, block=block)
+    dwg = None
+    if w_gate is not None:
+        dx = dx + rdp_cols_dgrad(dg, w_gate, b, dp=dp, block=block,
+                                 scale=False, interpret=interpret)
+        dwg_c = rdp_cols_wgrad(x2, dg, dp=dp, block=block, scale=False,
+                               interpret=interpret)
+        dwg = scatter_col_blocks(dwg_c, w_gate.shape[1], dp, b, block=block)
+    return (dx.astype(x2.dtype), dwu.astype(w_up.dtype),
+            dwg if dwg is None else dwg.astype(w_gate.dtype),
+            dwd.astype(w_down.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def fused_ffn_gated_vjp(x2, w_up, w_gate, w_down, b, dp: int, block: int,
+                        act, interpret: bool):
+    """Differentiable fused gated FFN (args positional; b traced, its
+    cotangent is None — same convention as kernels/autodiff.py)."""
+    if dp == 1:
+        h = act(x2 @ w_up) * (x2 @ w_gate)
+        return h.astype(x2.dtype) @ w_down
+    return fused_ffn_fwd(x2, w_up, w_gate, w_down, b, dp=dp, block=block,
+                         act=act, interpret=interpret)
+
+
+def _gated_fwd(x2, w_up, w_gate, w_down, b, dp, block, act, interpret):
+    return (fused_ffn_gated_vjp(x2, w_up, w_gate, w_down, b, dp, block, act,
+                                interpret), (x2, w_up, w_gate, w_down, b))
+
+
+def _gated_bwd(dp, block, act, interpret, res, dy):
+    x2, w_up, w_gate, w_down, b = res
+    if dp == 1:
+        u, g = x2 @ w_up, x2 @ w_gate
+        h, act_vjp = jax.vjp(lambda u_, g_: (act(u_) * g_).astype(x2.dtype),
+                             u, g)
+        dh = dy @ w_down.T
+        du, dg = act_vjp(dh)
+        return ((du @ w_up.T + dg @ w_gate.T).astype(x2.dtype),
+                (x2.T @ du).astype(w_up.dtype),
+                (x2.T @ dg).astype(w_gate.dtype),
+                (h.T @ dy).astype(w_down.dtype), None)
+    dx, dwu, dwg, dwd = _bwd_common(x2, w_up, w_gate, w_down, b, dy, dp=dp,
+                                    block=block, act=act,
+                                    interpret=interpret)
+    return dx, dwu, dwg, dwd, None
+
+
+fused_ffn_gated_vjp.defvjp(_gated_fwd, _gated_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def fused_ffn_plain_vjp(x2, w_up, w_down, b, dp: int, block: int, act,
+                        interpret: bool):
+    """Differentiable fused ungated FFN (see fused_ffn_gated_vjp)."""
+    if dp == 1:
+        return act(x2 @ w_up).astype(x2.dtype) @ w_down
+    return fused_ffn_fwd(x2, w_up, None, w_down, b, dp=dp, block=block,
+                         act=act, interpret=interpret)
+
+
+def _plain_fwd(x2, w_up, w_down, b, dp, block, act, interpret):
+    return (fused_ffn_plain_vjp(x2, w_up, w_down, b, dp, block, act,
+                                interpret), (x2, w_up, w_down, b))
+
+
+def _plain_bwd(dp, block, act, interpret, res, dy):
+    x2, w_up, w_down, b = res
+    if dp == 1:
+        u = x2 @ w_up
+        h, act_vjp = jax.vjp(lambda u_: act(u_).astype(x2.dtype), u)
+        dh = dy @ w_down.T
+        (du,) = act_vjp(dh)
+        return ((du @ w_up.T).astype(x2.dtype),
+                (x2.T @ du).astype(w_up.dtype),
+                (h.T @ dy).astype(w_down.dtype), None)
+    dx, dwu, _, dwd = _bwd_common(x2, w_up, None, w_down, b, dy, dp=dp,
+                                  block=block, act=act, interpret=interpret)
+    return dx, dwu, dwd, None
+
+
+fused_ffn_plain_vjp.defvjp(_plain_fwd, _plain_bwd)

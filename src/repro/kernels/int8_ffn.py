@@ -1,0 +1,111 @@
+"""int8 compact-matmul backend: per-kept-block symmetric weight quantization
+with f32 accumulation (serve/decode path; ``differentiable=False``).
+
+Weight-only quantization at the pattern-block granularity the kernels
+already DMA at: each of the ``nb`` pattern blocks of a weight gets one
+symmetric scale ``s_j = max|W_j| / 127`` and an int8 code tensor
+``q_j = round(W_j / s_j)``.  The compact FFN then runs the EXACT algebra
+
+    h[:, j] = (x @ q_j.astype(f32)) · s_j          (per-block scalar)
+    y       = Σ_j (h_j · s'_j) @ q'_j.astype(f32)  (down-proj row blocks)
+
+— the scales factor out of each block matmul, so the only error is the
+weight rounding (≤ s_j/2 per element), never accumulation error: all dot
+products accumulate in f32.  Kept blocks are gathered by the same
+``kept_block_indices`` enumeration as every other backend (bias may be
+traced — shard_map shard-local biases compose), so dropped blocks are
+neither dequantized nor multiplied.
+
+Scope/limits (DESIGN.md §15): inference only — the Trainer rejects the
+backend at construction (``Backend.differentiable=False``); activations
+stay in the input dtype (weight-only, no activation quantization); the
+quantize step runs per call and fuses under jit — a serving deployment
+would cache (q, s) per weight, which the plan/backend registry leaves to a
+later issue.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import patterns as P
+
+
+def quantize_blocks(w: jax.Array, *, nb: int, axis: int):
+    """Per-block symmetric int8 quantization along ``axis`` (nb blocks).
+
+    Returns ``(q, s)``: q int8 with w's shape, s f32 of shape [nb] —
+    ``w ≈ q * s[block(axis index)]``.
+    """
+    dim = w.shape[axis]
+    assert dim % nb == 0, (w.shape, axis, nb)
+    blk = dim // nb
+    shape = w.shape[:axis] + (nb, blk) + w.shape[axis + 1:]
+    wb = w.astype(jnp.float32).reshape(shape)
+    reduce_axes = tuple(i for i in range(wb.ndim) if i != axis)
+    amax = jnp.max(jnp.abs(wb), axis=reduce_axes)
+    s = jnp.maximum(amax, 1e-12) / 127.0                       # [nb]
+    bshape = [1] * wb.ndim
+    bshape[axis] = nb
+    q = jnp.round(wb / s.reshape(bshape)).astype(jnp.int8)
+    return q.reshape(w.shape), s
+
+
+def _take_blocks(t: jax.Array, idx: jax.Array, *, nb: int, axis: int):
+    """Gather kept blocks along ``axis`` (idx traced-ok), kept-major."""
+    dim = t.shape[axis]
+    blk = dim // nb
+    shape = t.shape[:axis] + (nb, blk) + t.shape[axis + 1:]
+    tb = t.reshape(shape)
+    kept = jnp.take(tb, idx, axis=axis)
+    out_shape = t.shape[:axis] + (idx.shape[0] * blk,) + t.shape[axis + 1:]
+    return kept.reshape(out_shape)
+
+
+def int8_up(x, w, *, dp: int, bias, nb: int):
+    """Quantized compact up-projection: [., K] @ W[:, kept] with per-block
+    dequant folded into a columnwise rescale (no ×dp)."""
+    q, s = quantize_blocks(w, nb=nb, axis=1)
+    if dp == 1:
+        h = x @ q.astype(jnp.float32)
+        srep = jnp.repeat(s, w.shape[1] // nb)
+    else:
+        idx = P.kept_block_indices(nb, dp, bias)
+        qk = _take_blocks(q, idx, nb=nb, axis=1)
+        h = x @ qk.astype(jnp.float32)
+        srep = jnp.repeat(s[idx], w.shape[1] // nb,
+                          total_repeat_length=(w.shape[1] // nb)
+                          * idx.shape[0])
+    return (h * srep).astype(x.dtype)
+
+
+def int8_down(h, w, *, dp: int, bias, nb: int):
+    """Quantized compact down-projection: h @ W[kept, :] — the per-row-block
+    scale moves onto h (exact: it is scalar per contraction block)."""
+    q, s = quantize_blocks(w, nb=nb, axis=0)
+    blk = w.shape[0] // nb
+    if dp == 1:
+        srep = jnp.repeat(s, blk)
+        return ((h * srep) @ q.astype(jnp.float32)).astype(h.dtype)
+    idx = P.kept_block_indices(nb, dp, bias)
+    qk = _take_blocks(q, idx, nb=nb, axis=0)
+    srep = jnp.repeat(s[idx], blk, total_repeat_length=blk * idx.shape[0])
+    return ((h * srep) @ qk.astype(jnp.float32)).astype(h.dtype)
+
+
+def int8_compact_ffn(x, w_up, w_down, w_gate, *, dp: int, bias, nb: int,
+                     act):
+    """Full compact (gated) FFN on int8 weights, f32 accumulation.
+
+    Same kept set, activation placement and ×dp scaling as every other
+    backend — interchangeable modulo weight-rounding error (the
+    ``Backend.quantized`` flag keys the looser test tolerance).
+    """
+    h = int8_up(x, w_up, dp=dp, bias=bias, nb=nb)
+    if w_gate is None:
+        h = act(h)
+    else:
+        h = act(h) * int8_up(x, w_gate, dp=dp, bias=bias, nb=nb)
+    if dp > 1:
+        h = h * dp
+    return int8_down(h, w_down, dp=dp, bias=bias, nb=nb)

@@ -20,6 +20,7 @@ import jax
 
 from . import ref
 from .autodiff import rdp_matmul_cols_vjp, rdp_matmul_rows_vjp, tdp_matmul_vjp
+from .fused_ffn import fused_ffn_gated_vjp, fused_ffn_plain_vjp
 
 
 @functools.cache
@@ -112,3 +113,21 @@ def rdp_ffn(x, w_up, w_down, bias, *, dp: int, act=jax.nn.relu,
     if dp > 1:
         h = h * dp
     return rdp_down(h, w_down, bias, dp=dp, block=block, use_pallas=use_pallas)
+
+
+def fused_ffn(x, w_up, w_down, bias, *, dp: int, act=jax.nn.relu,
+              w_gate=None, block: int = 128):
+    """Single-kernel compact FFN (kernels/fused_ffn): same numerics
+    contract as ``rdp_ffn`` but the [tokens, ffn_kept] hidden never leaves
+    VMEM.  Differentiable via the custom-VJP twins (compact backward with
+    rematerialized hidden).  dp == 1 degenerates to the dense FFN.
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if w_gate is None:
+        out = fused_ffn_plain_vjp(x2, w_up, w_down, bias, dp, block, act,
+                                  _interpret())
+    else:
+        out = fused_ffn_gated_vjp(x2, w_up, w_gate, w_down, bias, dp, block,
+                                  act, _interpret())
+    return out.reshape(*lead, -1)

@@ -1,0 +1,372 @@
+"""shard_map execution of the compact pattern FFN — TP without resharding.
+
+Under GSPMD the compact matmuls lose the paper's 1/dp FLOP win on tensor-
+parallel meshes: the strided kept-slice of a 'model'-sharded weight and the
+1/dp-shrunk ``ffn_kept`` activation both force the partitioner to insert
+collectives (all-gathers / collective-permutes) that swamp the skipped work
+(BENCH_train_tp.json measured speedup 0.93–0.99 < 1 before this module).
+Here the rdp/tdp forward AND custom-VJP backward paths run inside
+``shard_map`` instead, so each model shard executes its compact kernel on
+its **local kept blocks** with no resharding.  Two partitioning strategies:
+
+* **weight-local** (the headline path): the kept-block universe is
+  partitioned over the model axis.  Shard ``s`` owns the ``nb_local =
+  nb / n_model`` contiguous pattern blocks of its weight chunk; its kept
+  set is the same strided pattern with a *shard-local bias*
+  ``b_s = (bias - s * nb_local) mod dp`` (derived from
+  ``jax.lax.axis_index``, i.e. traced — the Pallas kernels take it through
+  their scalar-prefetch operand, the XLA path through a gather), so the
+  per-(dp, bias) bucket executables of ``DistributedTrainer`` stay one
+  compile per dp inside the body too.  Valid iff ``dp | nb_local`` — the
+  kept blocks then divide evenly across shards
+  (``DropoutPlan.validate_mesh(..., require_shard_kernels=True)`` turns a
+  violation into a ``MeshDivisibilityError`` at construction).
+  Communication: ONE psum of the [tokens, d_model] partial down-projection
+  per FFN — identical to dense Megatron TP, while the matmuls run at 1/dp.
+
+* **padded weight-local** (``dp ∤ nb_local`` but the padding is cheap):
+  shard ``s`` keeps its contiguous blocks and computes the padded
+  ``ceil(nb_local/dp)`` kept-candidate blocks, zero-masking the hidden of
+  candidates that fall outside its chunk.  Same communication shape as
+  the exact path (ONE psum, no weight movement, no token resharding) at
+  the price of up to ``ceil(nb_local/dp)·n_model − nb/dp`` padding
+  blocks of matmul — chosen whenever that padded width stays ≤ half the
+  dense width (``shard_strategy``), where the rendezvous saving beats
+  the extra flops.
+
+* **token-local** (fallback when the padding would not pay, e.g.
+  nb_local=1 where padding re-materializes the full dense width): tokens
+  are partitioned over the model axis instead (seq dim), each shard
+  all-gathers the weights in ONE packed collective and runs the full
+  compact FFN on its token slice with the *global* bias.  The all_gather
+  is differentiable (its transpose is a psum_scatter of the packed
+  weight grads), so the backward pass stays compact and shard-local as
+  well.
+
+TDP partitions tile-*columns* of the up projection across shards; the
+diagonal pattern keeps exactly ``tr/dp`` tiles in every tile-column
+(core/patterns.tdp_mask), so any column partition is automatically
+balanced — only the bias shifts per shard (``b_s = (bias - j0) mod dp``
+for first local tile-column ``j0``).
+
+Dispatched from ``FAMILIES[f].apply_ffn`` (core/plan.py) whenever an
+ambient mesh with a >1-sized model axis for 'ffn_kept' is set — zero call
+site edits.  ``disabled()`` scopes it off (the GSPMD-agreement tests and
+``train_bench --no-shard-kernels`` baseline use this).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as PSpec
+
+from .sharding import current_mesh, current_rules, rule_shard_axes
+
+# shard_map moved namespaces / renamed its replication-check kwarg across
+# JAX releases (same shim as models/layers.py).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _NOCHECK = {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _NOCHECK = {"check_rep": False}
+
+
+# --------------------------------------------------------------------------
+# Enable/disable scope
+# --------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def enabled() -> bool:
+    """Whether apply_ffn dispatches through the shard_map paths."""
+    return getattr(_state, "enabled", True)
+
+
+@contextlib.contextmanager
+def disabled():
+    """Scope with shard-kernel dispatch off (pure-GSPMD baseline)."""
+    prev = getattr(_state, "enabled", True)
+    _state.enabled = False
+    try:
+        yield
+    finally:
+        _state.enabled = prev
+
+
+# --------------------------------------------------------------------------
+# Partition-contract predicates (validate_mesh composes with these)
+# --------------------------------------------------------------------------
+
+def block_partition_ok(nb: int, dp: int, n_shards: int) -> bool:
+    """Whether the kept-block universe partitions evenly: each of the
+    ``n_shards`` model shards owns ``nb / n_shards`` contiguous blocks and
+    keeps exactly ``nb / n_shards / dp`` of them."""
+    return nb % n_shards == 0 and (nb // n_shards) % dp == 0
+
+
+def _model_axes(mesh, rules) -> tuple[tuple, int]:
+    """Mesh axes (and their total size) the compact FFN hidden shards over."""
+    return rule_shard_axes("ffn_kept", mesh, rules, is_param=False)
+
+
+def _batch_axes(mesh) -> tuple[tuple, int]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return axes, n
+
+
+def _axis_idx(mesh, axes):
+    """Combined (major-first) shard index over a tuple of mesh axes —
+    matches the PartitionSpec layout order."""
+    idx = jax.lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _bspec(axes_or_none, *rest):
+    """PSpec helper: () → None on the leading dim."""
+    lead = axes_or_none if axes_or_none else None
+    if lead is not None and len(lead) == 1:
+        lead = lead[0]
+    return PSpec(lead, *rest)
+
+
+def _one(axes):
+    """A single-axis spec entry from a (possibly length-1) axes tuple."""
+    return axes[0] if len(axes) == 1 else axes
+
+
+# --------------------------------------------------------------------------
+# RDP-style (column-kept) compact FFN
+# --------------------------------------------------------------------------
+
+def _rdp_body(x, w_up, w_down, w_gate, *, dp, bias, nb, backend, act):
+    """Backend-generic compact FFN on (possibly shard-local) weights.
+    ``bias`` may be traced (shard-local); no sharding constraints inside."""
+    from repro.core.plan import _rdp_compact_ffn
+    return _rdp_compact_ffn(x, w_up, w_down, w_gate, dp=dp, bias=bias,
+                            nb=nb, backend=backend, act=act,
+                            constrained=False)
+
+
+def _shard_rdp_weight_local(x, w_up, w_down, w_gate, *, dp, bias, nb,
+                            backend, act, mesh, maxes, n_m):
+    """Kept-block-partitioned path: compact kernels on local weight chunks,
+    shard-local bias, one psum of the partial down-projection."""
+    nb_loc = nb // n_m
+    baxes, n_b = _batch_axes(mesh)
+    x_lead = baxes if (x.ndim == 3 and x.shape[0] % n_b == 0) else ()
+    x_spec = _bspec(x_lead, *([None] * (x.ndim - 1)))
+    w_col = PSpec(None, _one(maxes))      # w_up / w_gate: columns sharded
+    w_row = PSpec(_one(maxes), None)      # w_down: rows sharded
+
+    gated = w_gate is not None
+
+    def body(xl, wu, wd, *wg):
+        s = _axis_idx(mesh, maxes)
+        b_loc = (jnp.asarray(bias, jnp.int32) - s * nb_loc) % dp
+        y = _rdp_body(xl, wu, wd, wg[0] if gated else None, dp=dp,
+                      bias=b_loc, nb=nb_loc, backend=backend, act=act)
+        return jax.lax.psum(y, maxes)
+
+    in_specs = [x_spec, w_col, w_row] + ([w_col] if gated else [])
+    args = [x, w_up, w_down] + ([w_gate] if gated else [])
+    fn = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=x_spec, **_NOCHECK)
+    return fn(*args)
+
+
+def _shard_rdp_weight_local_padded(x, w_up, w_down, w_gate, *, dp, bias,
+                                   nb, backend, act, mesh, maxes, n_m):
+    """Kept-block partition for ``dp ∤ nb_local``: shard ``s`` still owns
+    its ``nb_loc`` contiguous blocks, but the kept count per shard is
+    ragged (``floor``/``ceil`` of nb_loc/dp), so every shard computes the
+    padded ``kp = ceil(nb_loc/dp)`` candidate blocks and multiplies the
+    hidden of non-kept candidates by zero before the down projection.  Up
+    to ``kp·n_m − nb/dp`` padding blocks of extra matmul work buys the
+    dense-Megatron communication shape: NO weight movement, NO token
+    resharding — the single psum of the partial down-projection is the
+    only collective (on rendezvous-bound meshes this beats the token-local
+    fallback's gather).  Runs as one XLA gather+matmul per weight (the
+    candidate indices are traced, preserving one-executable-per-dp), so
+    the ``backend`` request is honored in spirit — a compact matmul on
+    exactly kp local blocks — if not by literal kernel choice."""
+    nb_loc = nb // n_m
+    kp = -(-nb_loc // dp)                    # ceil: padded blocks per shard
+    baxes, n_b = _batch_axes(mesh)
+    x_lead = baxes if (x.ndim == 3 and x.shape[0] % n_b == 0) else ()
+    x_spec = _bspec(x_lead, *([None] * (x.ndim - 1)))
+    w_col = PSpec(None, _one(maxes))
+    w_row = PSpec(_one(maxes), None)
+
+    gated = w_gate is not None
+
+    def body(xl, wu, wd, *wg):
+        s = _axis_idx(mesh, maxes)
+        t0 = (jnp.asarray(bias, jnp.int32) - s * nb_loc) % dp
+        offs = t0 + jnp.arange(kp, dtype=jnp.int32) * dp
+        valid = offs < nb_loc                # padding candidates masked out
+        idx = jnp.minimum(offs, nb_loc - 1)
+        blk = wu.shape[1] // nb_loc
+
+        def take_cols(w):
+            wb = w.reshape(w.shape[0], nb_loc, blk)
+            return jnp.take(wb, idx, axis=1).reshape(w.shape[0], kp * blk)
+
+        def take_rows(w):
+            wb = w.reshape(nb_loc, blk, w.shape[1])
+            return jnp.take(wb, idx, axis=0).reshape(kp * blk, w.shape[1])
+
+        h = act(xl @ take_cols(wu))
+        if gated:
+            h = h * (xl @ take_cols(wg[0]))
+        mask = jnp.repeat(valid.astype(h.dtype) * dp, blk,
+                          total_repeat_length=kp * blk)
+        y = (h * mask) @ take_rows(wd)
+        return jax.lax.psum(y, maxes)
+
+    in_specs = [x_spec, w_col, w_row] + ([w_col] if gated else [])
+    args = [x, w_up, w_down] + ([w_gate] if gated else [])
+    fn = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=x_spec, **_NOCHECK)
+    return fn(*args)
+
+
+def _shard_rdp_token_local(x, w_up, w_down, w_gate, *, dp, bias, nb,
+                           backend, act, mesh, maxes, n_m):
+    """Token-partitioned fallback: seq sharded over the model axis, weights
+    all-gathered inside the body (differentiable — wgrads reduce-scatter),
+    global bias, full compact FFN per token shard."""
+    baxes, n_b = _batch_axes(mesh)
+    x_lead = baxes if x.shape[0] % n_b == 0 else ()
+    x_spec = _bspec(x_lead, _one(maxes), None)
+    w_col = PSpec(None, _one(maxes))
+    w_row = PSpec(_one(maxes), None)
+
+    gated = w_gate is not None
+
+    def body(xl, wu, wd, *wg):
+        # ONE packed all_gather instead of three: on oversubscribed hosts
+        # (and small weights generally) the collective RENDEZVOUS, not the
+        # bytes, dominates — wd rides along transposed so all chunks share
+        # the (d_model, d_ff/n) layout.  Differentiable: the transpose of
+        # one tiled all_gather is one psum_scatter of the packed wgrads.
+        chunks = [wu, wg[0], wd.T] if gated else [wu, wd.T]
+        packed = jax.lax.all_gather(jnp.stack(chunks), maxes, axis=2,
+                                    tiled=True)
+        wu_f, wd_f = packed[0], packed[-1].T
+        wg_f = packed[1] if gated else None
+        return _rdp_body(xl, wu_f, wd_f, wg_f, dp=dp, bias=bias, nb=nb,
+                         backend=backend, act=act)
+
+    in_specs = [x_spec, w_col, w_row] + ([w_col] if gated else [])
+    args = [x, w_up, w_down] + ([w_gate] if gated else [])
+    fn = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=x_spec, **_NOCHECK)
+    return fn(*args)
+
+
+# --------------------------------------------------------------------------
+# TDP (diagonal tile) FFN
+# --------------------------------------------------------------------------
+
+def _shard_tdp_weight_local(x, w_up, w_down, w_gate, *, dp, bias, nb,
+                            backend, act, mesh, maxes, n_m):
+    """Tile-column partition of the up projection.  The diagonal pattern
+    keeps tr/dp tiles in EVERY tile-column, so any column split is
+    balanced; only the bias shifts: b_s = (bias - j0) mod dp."""
+    from repro.core.plan import _tdp_ffn_body
+    tile = max(w_up.shape[0] // nb, 1)
+    tc_loc = (w_up.shape[1] // tile) // n_m
+    baxes, n_b = _batch_axes(mesh)
+    x_lead = baxes if (x.ndim == 3 and x.shape[0] % n_b == 0) else ()
+    x_spec = _bspec(x_lead, *([None] * (x.ndim - 1)))
+    w_col = PSpec(None, _one(maxes))
+    w_row = PSpec(_one(maxes), None)
+
+    gated = w_gate is not None
+
+    def body(xl, wu, wd, *wg):
+        s = _axis_idx(mesh, maxes)
+        b_loc = (jnp.asarray(bias, jnp.int32) - s * tc_loc) % dp
+        y = _tdp_ffn_body(xl, wu, wd, wg[0] if gated else None, dp=dp,
+                          bias=b_loc, tile=tile, backend=backend, act=act,
+                          constrained=False)
+        return jax.lax.psum(y, maxes)
+
+    in_specs = [x_spec, w_col, w_row] + ([w_col] if gated else [])
+    args = [x, w_up, w_down] + ([w_gate] if gated else [])
+    fn = _shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=x_spec, **_NOCHECK)
+    return fn(*args)
+
+
+# --------------------------------------------------------------------------
+# Dispatch — called from FAMILIES[f].apply_ffn (zero call-site edits)
+# --------------------------------------------------------------------------
+
+def shard_strategy(family: str, *, x_ndim: int, seq: int, k: int, d_ff: int,
+                   dp: int, nb: int, n_m: int) -> Optional[str]:
+    """Which partition strategy ``maybe_shard_ffn`` picks for these shapes:
+    ``"weight_local"``, ``"token_local"``, or None (GSPMD path).  Exposed so
+    benchmarks/tests label rows by the path that actually runs."""
+    if dp <= 1 or n_m <= 1 or d_ff % nb != 0:
+        return None
+    if family == "tdp":
+        tile = max(k // nb, 1)
+        tc = d_ff // tile
+        if d_ff % tile == 0 and tc % n_m == 0 and (d_ff // n_m) % tile == 0:
+            return "weight_local"
+        return None
+    # rdp-style column-kept families (rdp, ssm_row, head_rdp, expert_drop
+    # all share RdpFamily.apply_ffn for their FFN form)
+    if d_ff % n_m == 0 and block_partition_ok(nb, dp, n_m):
+        return "weight_local"
+    # padded weight-local computes ceil(nb_loc/dp)·n_m of the nb blocks
+    # (masking the non-kept candidates); profitable only while that stays
+    # at most HALF the dense width — e.g. nb_loc=1 pads back up to the
+    # full dense FFN at every dp, where token-local still saves real work
+    padded_ok = nb % n_m == 0 and d_ff % n_m == 0
+    kp = -(-(nb // n_m) // dp) if padded_ok else 0
+    if padded_ok and kp * n_m * 2 <= nb:
+        return "weight_local_padded"
+    if x_ndim == 3 and seq % n_m == 0:
+        return "token_local"
+    if padded_ok and kp * n_m < nb:
+        return "weight_local_padded"
+    return None
+
+
+def maybe_shard_ffn(family: str, x, w_up, w_down, w_gate, *, dp: int, bias,
+                    nb: int, backend: str, act) -> Optional[jax.Array]:
+    """Route an FFN pattern application through shard_map if an ambient
+    mesh with a >1 model axis is set and a partition strategy applies.
+    Returns None (→ caller runs the plain GSPMD path) otherwise."""
+    if not enabled() or dp <= 1:
+        return None
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return None
+    maxes, n_m = _model_axes(mesh, rules)
+    strategy = shard_strategy(
+        family, x_ndim=x.ndim, seq=x.shape[1] if x.ndim == 3 else 0,
+        k=w_up.shape[0], d_ff=w_up.shape[1], dp=dp, nb=nb, n_m=n_m)
+    if strategy is None:
+        return None
+    kw = dict(dp=dp, bias=bias, nb=nb, backend=backend, act=act,
+              mesh=mesh, maxes=maxes, n_m=n_m)
+    if family == "tdp":
+        return _shard_tdp_weight_local(x, w_up, w_down, w_gate, **kw)
+    if strategy == "weight_local":
+        return _shard_rdp_weight_local(x, w_up, w_down, w_gate, **kw)
+    if strategy == "weight_local_padded":
+        return _shard_rdp_weight_local_padded(x, w_up, w_down, w_gate, **kw)
+    return _shard_rdp_token_local(x, w_up, w_down, w_gate, **kw)

@@ -209,9 +209,9 @@ def _registered_active_families():
 @pytest.mark.parametrize("family", _registered_active_families())
 @pytest.mark.parametrize("gated", [False, True])
 def test_every_family_backends_agree_with_oracle(family, gated):
-    """slice / gather / pallas must agree numerically under every
+    """Every declared backend must agree numerically under every
     registered family, gated and ungated."""
-    from repro.core.plan import get_family
+    from repro.core.plan import BACKENDS, get_family
     fam = get_family(family)
     params, x = _family_ffn_setup()
     kw = dict(dp=2, bias=1, nb=2, act=jax.nn.silu)
@@ -222,7 +222,16 @@ def test_every_family_backends_agree_with_oracle(family, gated):
         got = fam.apply_ffn(x, params["w_up"], params["w_down"], gate,
                             backend=backend, **kw)
         # pallas accumulates per k-block in VMEM scratch; XLA in one dot —
-        # fp-associativity differences up to ~1e-4 are expected
+        # fp-associativity differences up to ~1e-4 are expected.  Quantized
+        # backends (int8) only promise weight-rounding-level agreement:
+        # |err| ≲ (blockmax/254)·contraction ≈ a few % relative.
+        if BACKENDS[backend].quantized:
+            scale = float(np.max(np.abs(np.asarray(want, np.float32))))
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                atol=0.05 * scale,
+                err_msg=f"family={family} backend={backend} gated={gated}")
+            continue
         np.testing.assert_allclose(
             np.asarray(got, np.float32), np.asarray(want, np.float32),
             rtol=1e-4, atol=1e-4,

@@ -1,0 +1,225 @@
+"""shard_map compact-kernel tests (parallel/shard_kernels.py).
+
+The contract under test: with an ambient mesh whose 'model' axis is > 1,
+``FAMILIES[f].apply_ffn`` transparently dispatches through a shard_map
+partition strategy, and the result — forward AND gradients — agrees with
+the pure-GSPMD path (``shard_kernels.disabled()``) to ≤ 1e-5 for every
+differentiable family × backend, on both a pure-tp mesh (1×8) and a
+dp×tp mesh (2×4).  Plus: the one-executable-per-(dp, bias) compile
+contract holds INSIDE the shard_map body (bias stays traced), the
+weight-local divisibility contract raises ``MeshDivisibilityError`` under
+``validate_mesh(require_shard_kernels=True)``, and the non-differentiable
+int8 backend is rejected by the trainer but serves through the shard
+path.
+
+Multi-device cases run in a subprocess (the main pytest process already
+initialized jax with 1 CPU device) — same idiom as test_sharding.py.
+"""
+import subprocess
+import sys
+import textwrap
+
+
+def run_in_devices(n: int, code: str):
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n}'\n"
+        + textwrap.dedent(code))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True,
+                       env={"PYTHONPATH": "src",
+                            "PATH": "/usr/bin:/bin:/usr/local/bin",
+                            "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+_AGREEMENT_SWEEP = """
+    import contextlib
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.plan import BACKENDS, FAMILIES
+    from repro.launch.mesh import mesh_from_spec
+    from repro.parallel import shard_kernels as SK
+    from repro.parallel.sharding import PROFILES, set_mesh_and_rules
+
+    mesh = mesh_from_spec("%(mesh)s")
+    rules = PROFILES["tp"]
+    n_m = dict(mesh.shape)["model"]
+    nb, d, ff = 8, 64, 256
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (2, 16, d), jnp.float32)
+    wu = jax.random.normal(ks[1], (d, ff), jnp.float32) * 0.05
+    wd = jax.random.normal(ks[2], (ff, d), jnp.float32) * 0.05
+    wg = jax.random.normal(ks[3], (d, ff), jnp.float32) * 0.05
+
+    def apply(fam, backend, dp, bias, shard):
+        ctx = contextlib.nullcontext() if shard else SK.disabled()
+        with ctx:
+            return fam.apply_ffn(x, wu, wd, wg, backend=backend, dp=dp,
+                                 bias=bias, nb=nb, act=jax.nn.silu)
+
+    checked = 0
+    for fname in sorted(FAMILIES):
+        if fname == "identity":
+            continue
+        fam = FAMILIES[fname]
+        for backend in fam.backends:
+            if not BACKENDS[backend].differentiable:
+                continue
+            for dp in (2, 4):
+                try:
+                    fam.validate(nb, dp)
+                except ValueError:
+                    continue
+                strat = SK.shard_strategy(fname, x_ndim=3, seq=16, k=d,
+                                          d_ff=ff, dp=dp, nb=nb, n_m=n_m)
+                if strat is None:
+                    continue
+                bias = dp - 1
+                with set_mesh_and_rules(mesh, rules):
+                    y1 = apply(fam, backend, dp, bias, True)
+                    y0 = apply(fam, backend, dp, bias, False)
+                    err = float(jnp.max(jnp.abs(y1 - y0)))
+                    assert err <= 1e-5, (fname, backend, dp, strat, err)
+
+                    def loss(w, shard):
+                        return jnp.mean(apply(fam, backend, dp, bias,
+                                              shard) ** 2)
+
+                    g1 = jax.grad(lambda w: loss(w, True))(wu)
+                    g0 = jax.grad(lambda w: loss(w, False))(wu)
+                    gerr = float(jnp.max(jnp.abs(g1 - g0)))
+                    assert gerr <= 1e-5, (fname, backend, dp, strat, gerr)
+                checked += 1
+    assert checked >= 8, f"sweep collapsed: only {checked} combos ran"
+    print(f"ok {checked}")
+"""
+
+
+def test_shard_vs_gspmd_agreement_tp_mesh():
+    """Pure tensor-parallel mesh (1x8): forward and wgrad agree ≤1e-5 for
+    every differentiable family x backend the dispatcher routes."""
+    run_in_devices(8, _AGREEMENT_SWEEP % {"mesh": "1x8"})
+
+
+def test_shard_vs_gspmd_agreement_dp_tp_mesh():
+    """dp x tp mesh (2x4): same agreement sweep with the batch axis also
+    sharded — covers weight-local, padded and token-local strategies."""
+    run_in_devices(8, _AGREEMENT_SWEEP % {"mesh": "2x4"})
+
+
+def test_strategy_selection_matrix():
+    """shard_strategy picks the documented partition per (dp, mesh): exact
+    weight-local iff dp | nb_local, padded while ≤ half dense width,
+    token-local when padding would re-materialize dense."""
+    from repro.parallel.shard_kernels import (block_partition_ok,
+                                              shard_strategy)
+    # nb=8 over 4 model shards: nb_local=2
+    assert block_partition_ok(8, 2, 4)
+    assert not block_partition_ok(8, 4, 4)
+    kw = dict(x_ndim=3, seq=64, k=64, d_ff=256, nb=8)
+    assert shard_strategy("rdp", dp=2, n_m=4, **kw) == "weight_local"
+    assert shard_strategy("rdp", dp=4, n_m=4, **kw) == "weight_local_padded"
+    assert shard_strategy("rdp", dp=8, n_m=4, **kw) == "weight_local_padded"
+    # nb=8 over 8 shards: nb_local=1 — padding would rebuild dense width,
+    # so every dp>1 falls to token-local
+    assert shard_strategy("rdp", dp=2, n_m=8, **kw) == "token_local"
+    assert shard_strategy("rdp", dp=8, n_m=8, **kw) == "token_local"
+    # 2D input (no seq dim to shard) with padding unprofitable -> padded
+    # only while it still saves something, else GSPMD
+    kw2 = dict(x_ndim=2, seq=0, k=64, d_ff=256, nb=8)
+    assert shard_strategy("rdp", dp=2, n_m=8, **kw2) is None
+    # tdp: diagonal pattern balances any tile-column split
+    assert shard_strategy("tdp", dp=4, n_m=4, x_ndim=3, seq=64, k=256,
+                          d_ff=256, nb=8) == "weight_local"
+    # dp=1 / single shard never dispatch
+    assert shard_strategy("rdp", dp=1, n_m=4, **kw) is None
+    assert shard_strategy("rdp", dp=4, n_m=1, **kw) is None
+
+
+def test_one_executable_per_dp_inside_shard_map():
+    """bias stays traced inside the shard_map body: sweeping every bias at
+    a fixed dp reuses ONE executable (RecompileWatchdog-clean), for each
+    partition strategy."""
+    run_in_devices(8, """
+        import jax, jax.numpy as jnp
+        from repro.core.plan import get_family
+        from repro.launch.mesh import mesh_from_spec
+        from repro.obs.recompile import RecompileWatchdog
+        from repro.parallel.sharding import PROFILES, set_mesh_and_rules
+
+        fam = get_family("rdp")
+        nb, d, ff = 8, 64, 256
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(ks[0], (2, 16, d), jnp.float32)
+        wu = jax.random.normal(ks[1], (d, ff), jnp.float32) * 0.05
+        wd = jax.random.normal(ks[2], (ff, d), jnp.float32) * 0.05
+        mesh = mesh_from_spec("2x4")
+        with set_mesh_and_rules(mesh, PROFILES["tp"]):
+            for dp in (2, 4, 8):     # weight_local, padded, padded
+                fn = jax.jit(lambda x, wu, wd, b, dp=dp:
+                             fam.apply_ffn(x, wu, wd, None, backend="slice",
+                                           dp=dp, bias=b, nb=nb,
+                                           act=jax.nn.silu))
+                y = fn(x, wu, wd, jnp.int32(0))      # compile once
+                wd_ = RecompileWatchdog(name=f"dp{dp}").watch_jit(
+                    fn, f"shard_ffn_dp{dp}")
+                for b in range(1, dp):
+                    fn(x, wu, wd, jnp.int32(b))
+                wd_.assert_clean()                    # zero recompiles
+        print("ok")
+    """)
+
+
+def test_validate_mesh_require_shard_kernels():
+    """The strict weight-local contract turns dp inmid nb_local into a
+    MeshDivisibilityError at construction; the default mode keeps
+    accepting it (token-local/padded execute those buckets)."""
+    run_in_devices(8, """
+        import jax
+        from repro.core.plan import DropoutPlan, MeshDivisibilityError
+        from repro.parallel.sharding import PROFILES
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        rules = PROFILES["tp"]
+        # dp up to 8 with nb=8: nb_local=2 on 4 model shards; dp=4 and 8
+        # break dp | nb_local
+        plan = DropoutPlan(family="rdp",
+                           dist=(0.0, 0.4, 0.0, 0.3, 0.0, 0.0, 0.0, 0.3),
+                           nb=8, block=32)
+        plan.validate_mesh(mesh, rules, dims={"ffn_kept": 256})   # lenient ok
+        try:
+            plan.validate_mesh(mesh, rules, dims={"ffn_kept": 256},
+                               require_shard_kernels=True)
+            raise AssertionError("expected MeshDivisibilityError")
+        except MeshDivisibilityError as e:
+            assert "kept-block universe" in str(e), e
+        # dp support {1, 2} partitions evenly: strict mode passes
+        ok = DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=8, block=32)
+        ok.validate_mesh(mesh, rules, dims={"ffn_kept": 256},
+                         require_shard_kernels=True)
+        print("ok")
+    """)
+
+
+def test_trainer_rejects_int8_backend():
+    """int8 is weight-quantized serve-only (differentiable=False): the
+    trainer refuses it at construction, before any tracing."""
+    import jax
+    import pytest
+
+    from repro.configs import get_smoke
+    from repro.core.plan import BACKENDS, DropoutPlan
+    from repro.models import init_lm, materialize
+    from repro.optim.optimizers import AdamW
+    from repro.train.distributed import DistributedTrainer
+
+    assert not BACKENDS["int8"].differentiable
+    assert BACKENDS["int8"].quantized
+    cfg = get_smoke("qwen2_1_5b")
+    params = materialize(jax.random.PRNGKey(0), init_lm(cfg)[0])
+    plan = DropoutPlan(family="rdp", dist=(0.5, 0.5), nb=cfg.pattern_nb,
+                       block=cfg.d_ff // cfg.pattern_nb, backend="int8")
+    with pytest.raises(ValueError, match="not\\s+differentiable"):
+        DistributedTrainer(cfg, AdamW(), params, plan=plan)
